@@ -1,0 +1,28 @@
+"""Beyond-paper: balanced context parallelism (causal attention blocks).
+
+Contiguous equal-count splits vs zig-zag vs NicolPlus-optimal contiguous
+ranges, full-causal and sliding-window, at SP widths 8/16.
+"""
+from __future__ import annotations
+
+from repro.dist import cp_balance
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> dict:
+    out = {}
+    for nb, R, w in [(64, 8, 0), (256, 16, 0), (256, 16, 32)]:
+        naive = cp_balance.plan_imbalance(
+            cp_balance.contiguous_plan(nb, R), nb, R, window_blocks=w)
+        (bal_cuts, dt) = timeit(cp_balance.balanced_plan, nb, R, w,
+                                repeats=3)
+        bal = cp_balance.plan_imbalance(bal_cuts, nb, R, window_blocks=w)
+        zig = cp_balance.plan_imbalance(
+            cp_balance.interleaved_assignment(nb, R), nb, R,
+            window_blocks=w, contiguous=False)
+        out[(nb, R, w)] = (naive, zig, bal)
+        emit(f"cp.blocks{nb}.r{R}.w{w}", dt,
+             f"naive={naive * 100:.1f}%;zigzag={zig * 100:.2f}%;"
+             f"balanced={bal * 100:.2f}%")
+        assert bal <= naive
+    return out

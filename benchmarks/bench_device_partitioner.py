@@ -1,0 +1,38 @@
+"""Beyond-paper: the on-device (jittable) partitioner vs the host path.
+
+The host path gathers the load matrix and runs NicolPlus in Python/numpy;
+the device path runs wide-bisection probes under jit. We report wall time
+(CPU backend) and verify the device result matches host optimal quality.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device, jagged, oned, prefix
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    n = 512 if quick else 2048
+    m, P = 256, 16
+    A = prefix.pic_like_instance(n, n, iteration=10_000)
+    g = prefix.prefix_sum_2d(A)
+
+    _, dt_host = timeit(jagged.jag_m_heur, g, m, P=P, repeats=2)
+    host_li = jagged.jag_m_heur(g, m, P=P).load_imbalance(g)
+    emit(f"devpart.host.n{n}.m{m}", dt_host, f"LI={host_li * 100:.2f}%")
+
+    gd = jnp.asarray(g, jnp.float32)
+    fn = jax.jit(lambda gg: device.jag_m_heur_device(gg, P=P, m=m))
+    fn(gd)  # compile
+    (rc, counts, cc, Lmax), dt_dev = timeit(
+        lambda: jax.tree.map(lambda x: x.block_until_ready(), fn(gd)),
+        repeats=2)
+    li_dev = float(Lmax) / (A.sum() / m) - 1
+    emit(f"devpart.device.n{n}.m{m}", dt_dev, f"LI={li_dev * 100:.2f}%")
+    assert li_dev <= host_li * 1.25 + 0.01
+    return {"host": dt_host, "device": dt_dev,
+            "li_host": host_li, "li_device": li_dev}

@@ -1,0 +1,49 @@
+"""Kernel-layer microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (semantics,
+not speed), so wall-times here are for the jnp oracle path the TPU kernels
+are validated against; the kernels' correctness across shapes is asserted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prefix
+from repro.kernels.rectload.ops import jagged_loads
+from repro.kernels.rectload.ref import jagged_loads_ref
+from repro.kernels.sat.ops import gamma
+from repro.kernels.sat.ref import gamma_ref, sat_ref
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in ([512] if quick else [512, 2048]):
+        a = jnp.asarray(rng.integers(0, 1000, (n, n)).astype(np.int32))
+        ref = jax.jit(gamma_ref)
+        ref(a).block_until_ready()
+        _, dt = timeit(lambda: ref(a).block_until_ready(), repeats=3)
+        emit(f"kern.sat.jnp.{n}", dt, f"GBps={(n * n * 8) / dt / 1e9:.2f}")
+        g_pal = gamma(a)  # interpret-mode Pallas
+        np.testing.assert_array_equal(np.asarray(g_pal), np.asarray(ref(a)))
+        out[("sat", n)] = dt
+
+        # rectload on a jagged partition of this gamma
+        P = Q = 16
+        rc = jnp.asarray(np.linspace(0, n, P + 1).astype(np.int32))
+        cc = jnp.asarray(np.tile(np.linspace(0, n, Q + 1).astype(np.int32),
+                                 (P, 1)))
+        gf = ref(a).astype(jnp.float32)
+        refl = jax.jit(jagged_loads_ref)
+        refl(gf, rc, cc).block_until_ready()
+        _, dt = timeit(lambda: refl(gf, rc, cc).block_until_ready(),
+                       repeats=3)
+        emit(f"kern.rectload.jnp.{n}", dt, f"rects={P * Q}")
+        got = jagged_loads(gf, rc, cc)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(refl(gf, rc, cc)), rtol=1e-5)
+        out[("rectload", n)] = dt
+    return out

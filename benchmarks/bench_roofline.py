@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (results/dryrun*.jsonl).
+
+Emits one row per (arch x shape x mesh) with the three roofline terms and
+the dominant bottleneck; see EXPERIMENTS.md §Roofline for the discussion.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from .common import emit
+
+MODEL_FLOPS_NOTE = "see EXPERIMENTS.md for MODEL_FLOPS ratios"
+
+
+def load_records(pattern: str = "results/dryrun*.jsonl") -> list[dict]:
+    recs = {}
+    for path in sorted(glob.glob(pattern)):
+        for line in open(path):
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"])
+            recs[key] = r  # later files override (perf re-runs)
+    return list(recs.values())
+
+
+def run(quick: bool = True) -> dict:
+    recs = load_records()
+    if not recs:
+        emit("roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return {}
+    ok = dom = 0
+    table = {}
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        key = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(key, 0.0, "skipped")
+            continue
+        if r["status"] != "ok":
+            emit(key, 0.0, f"ERROR:{r.get('error', '?')[:60]}")
+            continue
+        ok += 1
+        rl = r["roofline"]
+        emit(key, rl["t_compute"] + 0.0,
+             f"tc={rl['t_compute'] * 1e3:.1f}ms;"
+             f"tm={rl['t_memory'] * 1e3:.1f}ms;"
+             f"tcoll={rl['t_collective'] * 1e3:.1f}ms;"
+             f"dom={rl['dominant']}")
+        table[(r["arch"], r["shape"], r["mesh"])] = rl
+    return table

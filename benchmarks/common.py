@@ -1,0 +1,18 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,35 @@
+"""Paper Fig. 3 / 11: load imbalance vs processor count on PIC-MAG-like.
+
+The paper's headline result: m-way jagged heuristics beat the optimal
+P x Q-way jagged partition, which beats rectilinear; hierarchical methods
+sit in between.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import prefix, registry
+from .common import emit, timeit
+
+ALGOS = ["rect-uniform", "rect-nicol", "jag-pq-heur", "jag-pq-opt",
+         "jag-m-heur", "jag-m-heur-probe", "hier-rb", "hier-relaxed"]
+
+
+def run(quick: bool = True) -> dict:
+    n = 256 if quick else 512
+    A = prefix.pic_like_instance(n, n, iteration=30_000)
+    g = prefix.prefix_sum_2d(A)
+    ms = [64, 256, 1024] if quick else [64, 256, 1024, 4096, 9216]
+    out = {}
+    for m in ms:
+        for name in ALGOS:
+            part, dt = timeit(registry.partition, name, g, m, repeats=1)
+            li = part.load_imbalance(g)
+            out[(name, m)] = li
+            emit(f"fig3.{name}.m{m}", dt, f"LI={li * 100:.2f}%")
+    # the paper's ordering must hold on the largest m
+    m = ms[-1]
+    assert out[("jag-m-heur-probe", m)] <= out[("jag-pq-opt", m)] + 1e-9
+    assert out[("jag-pq-opt", m)] <= out[("rect-nicol", m)] + 1e-9
+    assert out[("rect-nicol", m)] <= out[("rect-uniform", m)] + 1e-9
+    return out

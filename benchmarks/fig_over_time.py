@@ -1,0 +1,35 @@
+"""Paper Fig. 4 / 10: load imbalance across PIC iterations at fixed m.
+
+Reproduces the time-series behaviour: JAG-M-HEUR-PROBE stays near-constant
+and lowest; HIER-RB is stable but worse; HIER-RELAXED can be erratic
+(Fig. 8) — we report its spread.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import prefix, registry
+from .common import emit, timeit
+
+ALGOS = ["rect-nicol", "jag-pq-heur", "jag-m-heur", "jag-m-heur-probe",
+         "hier-rb", "hier-relaxed"]
+
+
+def run(quick: bool = True) -> dict:
+    n = 256 if quick else 512
+    m = 1024 if quick else 6400
+    iters = [0, 10_000, 20_000, 30_000] if quick else list(
+        range(0, 33_500, 2_500))
+    series = {a: [] for a in ALGOS}
+    for it in iters:
+        A = prefix.pic_like_instance(n, n, iteration=it)
+        g = prefix.prefix_sum_2d(A)
+        for name in ALGOS:
+            part, dt = timeit(registry.partition, name, g, m, repeats=1)
+            series[name].append(part.load_imbalance(g))
+    for name, ser in series.items():
+        emit(f"fig4.{name}.m{m}", 0.0,
+             f"LI_mean={np.mean(ser) * 100:.2f}%;LI_max={np.max(ser) * 100:.2f}%")
+    mean = {a: float(np.mean(s)) for a, s in series.items()}
+    assert mean["jag-m-heur-probe"] <= mean["jag-pq-heur"] + 1e-9
+    return mean

@@ -1,0 +1,29 @@
+"""Paper Fig. 9: algorithm runtimes on Uniform instances vs m.
+
+Expected ordering (paper): RECT-UNIFORM < HIER-RB < JAG-PQ-HEUR ~
+JAG-M-HEUR < JAG-M-HEUR-PROBE < RECT-NICOL < HIER-RELAXED << JAG-PQ-OPT.
+"""
+from __future__ import annotations
+
+from repro.core import prefix, registry
+from .common import emit, timeit
+
+ALGOS = ["rect-uniform", "hier-rb", "jag-pq-heur", "jag-m-heur",
+         "jag-m-heur-probe", "rect-nicol", "hier-relaxed"]
+
+
+def run(quick: bool = True) -> dict:
+    n = 256 if quick else 512
+    A = prefix.uniform_instance(n, n, delta=1.2)
+    g = prefix.prefix_sum_2d(A)
+    out = {}
+    ms = [100, 1024] if quick else [100, 1024, 10_000]
+    for m in ms:
+        for name in ALGOS:
+            part, dt = timeit(registry.partition, name, g, m, repeats=2)
+            out[(name, m)] = dt
+            emit(f"fig9.{name}.m{m}", dt,
+                 f"LI={part.load_imbalance(g) * 100:.2f}%")
+    m = ms[-1]
+    assert out[("rect-uniform", m)] <= out[("jag-m-heur-probe", m)]
+    return out

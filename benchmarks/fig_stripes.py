@@ -1,0 +1,31 @@
+"""Paper Fig. 5: impact of the number of stripes P on JAG-M-HEUR,
+against the Theorem 3 worst-case guarantee (Uniform instance)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import jagged, prefix
+from .common import emit, timeit
+
+
+def theorem3_bound(m, P, n1, n2, delta):
+    if m == P:
+        return float("inf")
+    return m / (m - P) + m * delta / (P * n2) + delta * delta * m / (n1 * n2)
+
+
+def run(quick: bool = True) -> dict:
+    n = 257 if quick else 514
+    m = 800
+    A = prefix.uniform_instance(n, n, delta=1.2)
+    g = prefix.prefix_sum_2d(A)
+    delta = A.max() / A.min()
+    out = {}
+    for P in [5, 10, 20, 28, 40, 80, 160]:
+        part, dt = timeit(jagged.jag_m_heur, g, m, P=P, repeats=1)
+        li = part.load_imbalance(g)
+        wc = theorem3_bound(m, P, n, n, delta) - 1
+        out[P] = (li, wc)
+        emit(f"fig5.P{P}", dt, f"LI={li * 100:.3f}%;worst_case={wc * 100:.1f}%")
+        assert li <= wc + 1e-9, (P, li, wc)
+    return out

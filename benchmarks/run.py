@@ -1,0 +1,52 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_cp_balance, bench_device_partitioner, bench_kernels,
+               bench_moe_placement, bench_roofline, fig_hybrid,
+               fig_imbalance_vs_m, fig_over_time, fig_runtime, fig_slac,
+               fig_stripes)
+
+BENCHES = [
+    ("fig3_imbalance_vs_m", fig_imbalance_vs_m.run),
+    ("fig4_over_time", fig_over_time.run),
+    ("fig5_stripes", fig_stripes.run),
+    ("fig9_runtime", fig_runtime.run),
+    ("fig12_slac", fig_slac.run),
+    ("fig14_16_hybrid", fig_hybrid.run),
+    ("moe_placement", bench_moe_placement.run),
+    ("cp_balance", bench_cp_balance.run),
+    ("kernels", bench_kernels.run),
+    ("device_partitioner", bench_device_partitioner.run),
+    ("roofline", bench_roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name}", flush=True)
+        try:
+            fn(quick=not args.full)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

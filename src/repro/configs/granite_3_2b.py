@@ -1,0 +1,17 @@
+"""Granite 3.0 2B [hf:ibm-granite/granite-3.0-2b-base; hf]: 40L, d=2048,
+32H (GQA kv=8), d_ff=8192, vocab 49155."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab_size=49155,
+    tie_embeddings=True, rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="granite-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, tie_embeddings=True,
+    q_chunk=16, kv_chunk=16,
+)

@@ -1,0 +1,15 @@
+"""repro.core — rectangular load-balancing partitioners (the paper's core).
+
+Quick use::
+
+    from repro.core import prefix, registry
+    A = prefix.pic_like_instance(512, 512, iteration=20_000)
+    gamma = prefix.prefix_sum_2d(A)
+    part = registry.partition("jag-m-heur-probe", gamma, m=6400)
+    print(part.load_imbalance(gamma))
+"""
+from . import hier, hybrid, jagged, oned, prefix, rect, registry, types
+from .types import Partition, Rect
+
+__all__ = ["hier", "hybrid", "jagged", "oned", "prefix", "rect", "registry",
+           "types", "Partition", "Rect"]

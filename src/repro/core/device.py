@@ -1,0 +1,174 @@
+"""On-device (jittable) partitioners — the TPU adaptation of Section 2.2.
+
+The paper's NicolPlus machinery is pointer-chasing parametric search — fine
+on a host CPU, hostile to a TPU's vector units. We restructure it:
+
+- ``probe_device``: the Han-et-al greedy probe as a ``lax.scan`` of
+  ``searchsorted`` steps, *vectorized over a batch of candidate bottleneck
+  values* (the VPU sweeps many L values at the price of one).
+- ``optimal_1d_device``: *wide bisection* — each round probes K candidates
+  spanning [lo, hi] simultaneously, shrinking the interval by (K+1)x per
+  round instead of 2x; 6 rounds at K=8 give a 5e5x reduction, below f32
+  resolution for any realistic load range.
+- ``jag_m_heur_device``: the paper's JAG-M-HEUR end-to-end on device: main
+  dimension by wide bisection, proportional processor counts, per-stripe
+  cuts by a batched masked probe (vmapped over stripes). Only the O(m) cut
+  vectors ever leave the device — the load matrix stays in HBM, enabling
+  the distributed rebalancing the paper's Section 6 calls for.
+
+All functions are pure jnp/lax: they jit, vmap, and lower under pjit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# probes
+
+
+def _advance(p: jnp.ndarray, pos: jnp.ndarray, L: jnp.ndarray) -> jnp.ndarray:
+    """One greedy step: furthest index e with p[e] <= p[pos] + L, > pos."""
+    target = jnp.take(p, pos) + L
+    nxt = jnp.searchsorted(p, target, side="right") - 1
+    nxt = jnp.minimum(nxt, p.shape[0] - 1)
+    return jnp.maximum(nxt, pos)  # stuck (single element > L) stays stuck
+
+
+def probe_device(p: jnp.ndarray, m: int, Ls: jnp.ndarray) -> jnp.ndarray:
+    """Feasibility of each candidate bottleneck in ``Ls`` ((B,) bool)."""
+    pos0 = jnp.zeros(Ls.shape, dtype=jnp.int32)
+
+    def step(pos, _):
+        return _advance(p, pos, Ls), None
+
+    pos, _ = jax.lax.scan(step, pos0, None, length=m)
+    return pos == p.shape[0] - 1
+
+
+def probe_cuts_device(p: jnp.ndarray, m: int, L: jnp.ndarray) -> jnp.ndarray:
+    """Cut array (m+1,) realizing bottleneck L (garbage if infeasible)."""
+    def step(pos, _):
+        nxt = _advance(p, pos[None], L)[0]
+        return nxt, nxt
+
+    _, cuts = jax.lax.scan(step, jnp.int32(0), None, length=m)
+    return jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "rounds"))
+def optimal_1d_device(p: jnp.ndarray, m: int, *, k: int = 8,
+                      rounds: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Optimal 1D partition by wide bisection. Returns (cuts, bottleneck).
+
+    Exact to within (hi-lo)/(k+1)^rounds of the true optimum -- with the
+    default 8 rounds of 9-way splitting that is a 4.3e7 reduction of the
+    initial DirectCut gap, i.e. exact for integer loads below ~4e7 * m.
+    """
+    n = p.shape[0] - 1
+    total = p[n]
+    el_max = jnp.max(jnp.diff(p))
+    lo = jnp.maximum(total / m, el_max)  # infeasible-or-optimal
+    hi = total / m + el_max              # always feasible (DirectCut bound)
+
+    def round_(carry, _):
+        lo, hi = carry
+        fr = jnp.arange(1, k + 1, dtype=p.dtype) / (k + 1)
+        Ls = lo + (hi - lo) * fr
+        feas = probe_device(p, m, Ls)
+        # new hi: smallest feasible candidate (or old hi)
+        hi_new = jnp.min(jnp.where(feas, Ls, hi))
+        # new lo: largest infeasible candidate (or old lo)
+        lo_new = jnp.max(jnp.where(~feas, Ls, lo))
+        return (jnp.minimum(lo_new, hi_new), hi_new), None
+
+    (lo, hi), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+    cuts = probe_cuts_device(p, m, hi)
+    return cuts, hi
+
+
+# ---------------------------------------------------------------------------
+# masked per-stripe probe (variable processor counts, static shapes)
+
+
+def _probe_cuts_masked(p: jnp.ndarray, m_max: int, count: jnp.ndarray,
+                       L: jnp.ndarray) -> jnp.ndarray:
+    """Cuts (m_max+1,) using only ``count`` intervals; rest collapse at n."""
+    n = p.shape[0] - 1
+
+    def step(carry, i):
+        pos = carry
+        nxt = jnp.where(i < count, _advance(p, pos[None], L)[0], pos)
+        nxt = jnp.where(i == count - 1, n, nxt)  # last live interval: to end
+        return nxt, nxt
+
+    _, cuts = jax.lax.scan(step, jnp.int32(0),
+                           jnp.arange(m_max, dtype=jnp.int32))
+    return jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
+
+
+def _stripe_bottleneck(p, cuts):
+    return jnp.max(jnp.take(p, cuts[1:]) - jnp.take(p, cuts[:-1]))
+
+
+@functools.partial(jax.jit, static_argnames=("P", "m", "k", "rounds"))
+def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                      rounds: int = 8):
+    """JAG-M-HEUR fully on device.
+
+    gamma: (n1+1, n2+1) device prefix sums (e.g. from kernels/sat).
+    Returns (row_cuts (P+1,), counts (P,), col_cuts (P, m_max+1), Lmax)
+    with m_max = m - P + 1 (a stripe can never get more than that, since
+    every other stripe keeps at least one processor).
+    """
+    n2 = gamma.shape[1] - 1
+    row_prefix = gamma[:, n2]
+    row_cuts, _ = optimal_1d_device(row_prefix, P, k=k, rounds=rounds)
+
+    stripe_prefix = (jnp.take(gamma, row_cuts[1:], axis=0)
+                     - jnp.take(gamma, row_cuts[:-1], axis=0))  # (P, n2+1)
+    loads = stripe_prefix[:, n2]
+    total = jnp.maximum(row_prefix[-1], 1)
+
+    # paper's proportional allocation: ceil((m - P) * load / total), >= 1
+    counts = jnp.ceil((m - P) * loads / total).astype(jnp.int32)
+    counts = jnp.maximum(counts, 1)
+
+    def give_leftover(counts, _):
+        s = jnp.argmax(loads / counts)
+        return counts.at[s].add(jnp.where(counts.sum() < m, 1, 0)), None
+
+    counts, _ = jax.lax.scan(give_leftover, counts, None, length=P)
+
+    m_max = m - P + 1
+
+    def stripe_optimal(p, count):
+        n = p.shape[0] - 1
+        total_s = p[n]
+        el = jnp.max(jnp.diff(p))
+        lo = jnp.maximum(total_s / count, el)
+        hi = total_s / count + el
+
+        def round_(carry, _):
+            lo, hi = carry
+            fr = jnp.arange(1, k + 1, dtype=p.dtype) / (k + 1)
+            Ls = lo + (hi - lo) * fr
+
+            def feas_one(L):
+                cuts = _probe_cuts_masked(p, m_max, count, L)
+                return _stripe_bottleneck(p, cuts) <= L
+
+            feas = jax.vmap(feas_one)(Ls)
+            hi_new = jnp.min(jnp.where(feas, Ls, hi))
+            lo_new = jnp.max(jnp.where(~feas, Ls, lo))
+            return (jnp.minimum(lo_new, hi_new), hi_new), None
+
+        (lo_f, hi_f), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+        cuts = _probe_cuts_masked(p, m_max, count, hi_f)
+        return cuts, _stripe_bottleneck(p, cuts)
+
+    col_cuts, bots = jax.vmap(stripe_optimal)(
+        stripe_prefix.astype(jnp.float32), counts)
+    return row_cuts, counts, col_cuts, jnp.max(bots)

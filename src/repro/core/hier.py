@@ -1,0 +1,253 @@
+"""Hierarchical bipartitions — paper Section 3.3.
+
+- ``hier_rb``      HIER-RB (Berger-Bokhari recursive bisection). Variants:
+                   'hor'/'ver' alternate the cut dimension starting with
+                   rows/cols; 'dist' cuts the longer dimension; 'load' tries
+                   both dimensions and keeps the better expected balance.
+- ``hier_relaxed`` HIER-RELAXED: at each node pick (dimension, cut, j)
+                   minimizing max(L1/j, L2/(m-j)) — the dynamic program's
+                   step with recursive calls replaced by average loads.
+                   Vectorized over all cut positions via Gamma slices.
+- ``hier_opt``     HIER-OPT: the exact DP over (rectangle, m). Polynomial
+                   but heavy; for small instances / tests only (the paper
+                   did not even run it: "expected to run in hours").
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .prefix import rect_load, stripe_col_prefix, stripe_row_prefix
+from .types import Partition, Rect
+
+
+def _best_cut_relaxed(gamma: np.ndarray, r: Rect, m: int):
+    """min over (dim, cut, j) of max(L1/j, L2/(m-j)); vectorized over cuts.
+
+    For each candidate cut the optimal j is the proportional split
+    j* ~ m * L1 / (L1 + L2); we evaluate floor/ceil (and +-1) of it.
+    Returns (cost, dim, cut, j).
+    """
+    total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
+    best = (np.inf, 0, r.r0 + 1, 1)
+    for dim in (0, 1):
+        if dim == 0:
+            lo, hi = r.r0, r.r1
+            if hi - lo < 2:
+                continue
+            p = stripe_row_prefix(gamma, r.c0, r.c1)  # over rows
+        else:
+            lo, hi = r.c0, r.c1
+            if hi - lo < 2:
+                continue
+            p = stripe_col_prefix(gamma, r.r0, r.r1)  # over cols
+        cuts = np.arange(lo + 1, hi)
+        l1 = (p[cuts] - p[lo]).astype(np.float64)
+        l2 = float(total) - l1
+        with np.errstate(divide="ignore", invalid="ignore"):
+            jstar = m * l1 / np.maximum(l1 + l2, 1e-300)
+        for jc in (np.floor(jstar), np.ceil(jstar)):
+            j = np.clip(jc, 1, m - 1)
+            cost = np.maximum(l1 / j, l2 / (m - j))
+            i = int(np.argmin(cost))
+            if cost[i] < best[0]:
+                best = (float(cost[i]), dim, int(cuts[i]), int(j[i]))
+    return best
+
+
+def hier_relaxed(gamma: np.ndarray, m: int, variant: str = "load"
+                 ) -> Partition:
+    """HIER-RELAXED. variant: 'load' (paper's best), 'dist', 'hor', 'ver'.
+
+    'load' uses the full relaxed-DP step (both dims); the others restrict
+    the dimension choice like their HIER-RB counterparts.
+    """
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    rects: list[Rect] = []
+
+    def rec(r: Rect, k: int, depth: int) -> None:
+        if k == 1 or r.area <= 1:
+            rects.append(r)
+            return
+        cost, dim, cut, j = _best_cut_relaxed(gamma, r, k)
+        if variant == "hor":
+            want = depth % 2
+        elif variant == "ver":
+            want = 1 - depth % 2
+        elif variant == "dist":
+            want = 0 if (r.r1 - r.r0) >= (r.c1 - r.c0) else 1
+        else:
+            want = None
+        if want is not None and dim != want:
+            forced = _best_cut_dim(gamma, r, k, want)
+            if forced is not None:
+                cost, dim, cut, j = forced
+        if not np.isfinite(cost):
+            rects.append(r)  # cannot split further; single (possibly fat) part
+            return
+        if dim == 0:
+            a, b = Rect(r.r0, cut, r.c0, r.c1), Rect(cut, r.r1, r.c0, r.c1)
+        else:
+            a, b = Rect(r.r0, r.r1, r.c0, cut), Rect(r.r0, r.r1, cut, r.c1)
+        rec(a, j, depth + 1)
+        rec(b, k - j, depth + 1)
+
+    rec(Rect(0, n1, 0, n2), m, 0)
+    return Partition(rects, (n1, n2))
+
+
+def _best_cut_dim(gamma: np.ndarray, r: Rect, m: int, dim: int):
+    """Relaxed best (cut, j) restricted to one dimension."""
+    total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
+    if dim == 0:
+        lo, hi = r.r0, r.r1
+        p = stripe_row_prefix(gamma, r.c0, r.c1)
+    else:
+        lo, hi = r.c0, r.c1
+        p = stripe_col_prefix(gamma, r.r0, r.r1)
+    if hi - lo < 2:
+        return None
+    cuts = np.arange(lo + 1, hi)
+    l1 = (p[cuts] - p[lo]).astype(np.float64)
+    l2 = float(total) - l1
+    best = None
+    with np.errstate(divide="ignore", invalid="ignore"):
+        jstar = m * l1 / np.maximum(l1 + l2, 1e-300)
+    for jc in (np.floor(jstar), np.ceil(jstar)):
+        j = np.clip(jc, 1, m - 1)
+        cost = np.maximum(l1 / j, l2 / (m - j))
+        i = int(np.argmin(cost))
+        if best is None or cost[i] < best[0]:
+            best = (float(cost[i]), dim, int(cuts[i]), int(j[i]))
+    return best
+
+
+def hier_rb(gamma: np.ndarray, m: int, variant: str = "load") -> Partition:
+    """HIER-RB: split into two ~equal-load halves, recurse with m//2 |
+    m - m//2 processors. variant as in the paper: 'load', 'dist', 'hor',
+    'ver'."""
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    rects: list[Rect] = []
+
+    def split_scores(r: Rect, k: int, dim: int):
+        """Best (cost, cut, j) for halving along dim with k1=k//2 procs."""
+        total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
+        if dim == 0:
+            lo, hi = r.r0, r.r1
+            p = stripe_row_prefix(gamma, r.c0, r.c1)
+        else:
+            lo, hi = r.c0, r.c1
+            p = stripe_col_prefix(gamma, r.r0, r.r1)
+        if hi - lo < 2:
+            return None
+        k1 = k // 2
+        best = None
+        for j in {k1, k - k1}:
+            target = p[lo] + float(total) * (j / k)
+            s = int(np.searchsorted(p, target, side="left"))
+            for cand in (s - 1, s, s + 1):
+                cand = min(max(cand, lo + 1), hi - 1)
+                l1 = float(p[cand] - p[lo])
+                cost = max(l1 / j, (float(total) - l1) / (k - j))
+                if best is None or cost < best[0]:
+                    best = (cost, cand, j)
+        return best
+
+    def rec(r: Rect, k: int, depth: int) -> None:
+        if k == 1 or r.area <= 1:
+            rects.append(r)
+            return
+        if variant == "hor":
+            dims = [depth % 2]
+        elif variant == "ver":
+            dims = [1 - depth % 2]
+        elif variant == "dist":
+            dims = [0 if (r.r1 - r.r0) >= (r.c1 - r.c0) else 1]
+        else:  # 'load': try both, keep the better expected balance
+            dims = [0, 1]
+        best = None
+        for dim in dims:
+            sc = split_scores(r, k, dim)
+            if sc is not None and (best is None or sc[0] < best[0]):
+                best = (*sc, dim)
+        if best is None:
+            # degenerate thin rectangle: try the other dimension
+            for dim in (0, 1):
+                sc = split_scores(r, k, dim)
+                if sc is not None and (best is None or sc[0] < best[0]):
+                    best = (*sc, dim)
+        if best is None:
+            rects.append(r)
+            return
+        _, cut, j, dim = best
+        if dim == 0:
+            a, b = Rect(r.r0, cut, r.c0, r.c1), Rect(cut, r.r1, r.c0, r.c1)
+        else:
+            a, b = Rect(r.r0, r.r1, r.c0, cut), Rect(r.r0, r.r1, cut, r.c1)
+        rec(a, j, depth + 1)
+        rec(b, k - j, depth + 1)
+
+    rec(Rect(0, n1, 0, n2), m, 0)
+    return Partition(rects, (n1, n2))
+
+
+def hier_opt(gamma: np.ndarray, m: int) -> Partition:
+    """HIER-OPT: exact hierarchical bipartition DP (paper Eq. 1-5).
+
+    O(n1^2 n2^2 m^2 log max(n1, n2)) — small instances only.
+    """
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+
+    @functools.lru_cache(maxsize=None)
+    def f(r0: int, r1: int, c0: int, c1: int, k: int) -> float:
+        total = float(rect_load(gamma, r0, r1, c0, c1))
+        if k == 1:
+            return total
+        if total == 0:
+            return 0.0
+        best = total
+        for j in range(1, k):
+            for x in range(r0 + 1, r1):
+                v = max(f(r0, x, c0, c1, j), f(x, r1, c0, c1, k - j))
+                if v < best:
+                    best = v
+            for y in range(c0 + 1, c1):
+                v = max(f(r0, r1, c0, y, j), f(r0, r1, y, c1, k - j))
+                if v < best:
+                    best = v
+        return best
+
+    best_val = f(0, n1, 0, n2, m)
+
+    def backtrack(r0, r1, c0, c1, k) -> list[Rect]:
+        if k == 1:
+            return [Rect(r0, r1, c0, c1)]
+        target = f(r0, r1, c0, c1, k)
+        if float(rect_load(gamma, r0, r1, c0, c1)) == 0.0:
+            # all-zero region: chop arbitrarily along any splittable dim
+            if r1 - r0 >= 2:
+                x = r0 + 1
+                return (backtrack(r0, x, c0, c1, 1)
+                        + backtrack(x, r1, c0, c1, k - 1))
+            if c1 - c0 >= 2:
+                y = c0 + 1
+                return (backtrack(r0, r1, c0, y, 1)
+                        + backtrack(r0, r1, y, c1, k - 1))
+            return [Rect(r0, r1, c0, c1)]  # cannot split an 1x1 further
+        for j in range(1, k):
+            for x in range(r0 + 1, r1):
+                if max(f(r0, x, c0, c1, j), f(x, r1, c0, c1, k - j)) \
+                        <= target + 1e-9:
+                    return (backtrack(r0, x, c0, c1, j)
+                            + backtrack(x, r1, c0, c1, k - j))
+            for y in range(c0 + 1, c1):
+                if max(f(r0, r1, c0, y, j), f(r0, r1, y, c1, k - j)) \
+                        <= target + 1e-9:
+                    return (backtrack(r0, r1, c0, y, j)
+                            + backtrack(r0, r1, y, c1, k - j))
+        return [Rect(r0, r1, c0, c1)]  # k > 1 but unsplittable (1x1)
+
+    rects = backtrack(0, n1, 0, n2, m)
+    f.cache_clear()
+    return Partition(rects, (n1, n2))

@@ -1,0 +1,120 @@
+"""HYBRID two-phase partitioning — paper Section 5.
+
+Phase 1 partitions A into P rectangles with a fast algorithm; each part is
+allocated Q_r = ceil((m-P) * L(r)/L(A)) processors (leftovers greedily);
+phase 2 partitions each part independently with Q_r processors.
+
+Engineering from the paper:
+- fast/slow phase 2: run the *fast* algorithm on every part, then repeatedly
+  run the *slow* algorithm on the most-loaded part while it improves.
+- expected load imbalance (eLI = max_r L(r)/Q_r) predicts the achieved LI
+  when phase 2 is (near-)optimal, so P is chosen by scanning candidate P
+  values (ends of the ceil((m-P)/P) plateaus) and running phase 2 only at
+  the best expected one.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from .jagged import _proportional_counts
+from .prefix import prefix_sum_2d
+from .types import Partition, Rect
+
+Algo = Callable[[np.ndarray, int], Partition]
+
+
+def _subgamma(gamma: np.ndarray, r: Rect) -> np.ndarray:
+    """Gamma of the sub-matrix A[r0:r1, c0:c1], derived from Gamma in O(area)."""
+    g = (gamma[r.r0:r.r1 + 1, r.c0:r.c1 + 1]
+         - gamma[r.r0:r.r1 + 1, r.c0:r.c0 + 1]
+         - gamma[r.r0:r.r0 + 1, r.c0:r.c1 + 1]
+         + gamma[r.r0, r.c0])
+    return g
+
+
+def _offset(part: Partition, r: Rect) -> list[Rect]:
+    return [Rect(q.r0 + r.r0, q.r1 + r.r0, q.c0 + r.c0, q.c1 + r.c0)
+            for q in part.rects]
+
+
+def hybrid(gamma: np.ndarray, m: int, phase1: Algo, phase2: Algo,
+           P: int, phase2_fast: Algo | None = None) -> Partition:
+    """HYBRID(phase1/phase2) with optional fast/slow phase-2 refinement."""
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    part1 = phase1(gamma, P)
+    parts = part1.rects
+    loads = part1.loads(gamma).astype(np.float64)
+    counts = _proportional_counts(loads, m)
+
+    sub = []
+    for r, q in zip(parts, counts):
+        sg = _subgamma(gamma, r)
+        fast = phase2_fast if phase2_fast is not None else phase2
+        sp = fast(sg, q)
+        sub.append([sp.max_load(sg), r, sg, q, sp])
+
+    if phase2_fast is not None:
+        # fast/slow: improve the hottest part with the slow algorithm until
+        # no improvement
+        while True:
+            i = int(np.argmax([s[0] for s in sub]))
+            cur, r, sg, q, _ = sub[i]
+            slow = phase2(sg, q)
+            v = slow.max_load(sg)
+            if v < cur - 1e-12:
+                sub[i] = [v, r, sg, q, slow]
+            else:
+                break
+
+    rects: list[Rect] = []
+    for _, r, _, _, sp in sub:
+        rects.extend(_offset(sp, r))
+    return Partition(rects, (n1, n2), m_target=m)
+
+
+def expected_li(gamma: np.ndarray, part1: Partition, m: int) -> float:
+    """eLI = max_r L(r)/Q_r normalized by global average (paper Section 5)."""
+    loads = part1.loads(gamma).astype(np.float64)
+    counts = np.asarray(_proportional_counts(loads, m), dtype=np.float64)
+    total = float(gamma[-1, -1])
+    if total == 0:
+        return 0.0
+    return float((loads / counts).max() / (total / m)) - 1.0
+
+
+def candidate_P_values(m: int, p_min: int) -> list[int]:
+    """Ends of the intervals where ceil((m-P)/P) is constant (paper's scan)."""
+    out = []
+    P = max(p_min, 2)
+    while P <= m // 2:
+        v = -(-(m - P) // P)  # ceil
+        # largest P' with the same ceil value: ceil((m-P')/P') == v
+        # (m - P')/P' <= v  =>  P' >= m/(v+1); plateau end is the largest P
+        # with ceil >= v, i.e. P'' = floor(m / v) when v >= 1
+        if v >= 1:
+            Pend = m // v
+            Pend = min(max(Pend, P), m // 2)
+        else:
+            Pend = m // 2
+        out.append(Pend)
+        P = Pend + 1
+    return sorted(set(out))
+
+
+def hybrid_auto(gamma: np.ndarray, m: int, phase1: Algo, phase2: Algo,
+                p_min: int | None = None,
+                phase2_fast: Algo | None = None) -> Partition:
+    """HYBRID with P chosen by the expected-LI scan (paper Figure 16)."""
+    if p_min is None:
+        p_min = max(int(np.sqrt(m)), 2)
+    best_P, best_e = None, np.inf
+    for P in candidate_P_values(m, p_min):
+        part1 = phase1(gamma, P)
+        e = expected_li(gamma, part1, m)
+        if e < best_e:
+            best_e, best_P = e, P
+    if best_P is None:
+        best_P = max(min(m // 2, p_min), 1)
+    return hybrid(gamma, m, phase1, phase2, best_P, phase2_fast=phase2_fast)

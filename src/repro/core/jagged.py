@@ -1,0 +1,349 @@
+"""Jagged partitions — paper Section 3.2 (the paper's main contribution).
+
+P x Q-way jagged:
+- ``jag_pq_heur``       JAG-PQ-HEUR: optimal 1D on the main-dim projection,
+                        then optimal 1D inside each stripe (Thm 1 bound).
+- ``jag_pq_opt``        JAG-PQ-OPT (Nicol form): exact P x Q-way jagged via
+                        bisection + a probe whose interval cost is the
+                        stripe's optimal Q-way bottleneck (monotone).
+
+m-way jagged (introduced by the paper):
+- ``jag_m_heur``        JAG-M-HEUR: P=sqrt(m) stripes; Q_S proportional to
+                        stripe load (ceil over m-P procs, leftovers greedy).
+- ``jag_m_probe``       JAG-M-PROBE: given stripes, the optimal processor
+                        counts + cuts via PROBE-M bisection (nicol_multi).
+- ``jag_m_heur_probe``  JAG-M-HEUR-PROBE: JAG-M-HEUR stripes + JAG-M-PROBE.
+- ``jag_m_alloc``       JAG-M-ALLOC: optimal stripe boundaries for a given
+                        sequence of per-stripe processor counts (DP).
+- ``jag_m_opt``         JAG-M-OPT: exact m-way jagged DP with the paper's
+                        pruning (binary search on k, memoized 1D, B&B upper
+                        bound from JAG-M-HEUR-PROBE).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import oned
+from .prefix import row_prefix, stripe_col_prefix, transpose_gamma
+from .types import Partition, from_row_cuts_and_col_cuts
+
+# ---------------------------------------------------------------------------
+# helpers
+
+
+def _build(gamma, row_cuts, col_cuts_list) -> Partition:
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    return from_row_cuts_and_col_cuts(row_cuts, col_cuts_list, (n1, n2))
+
+
+def _with_orientation(fn):
+    """Add orient='hor'|'ver'|'best' handling to a gamma-based algorithm."""
+
+    @functools.wraps(fn)
+    def wrapped(gamma, m, *args, orient: str = "best", **kw):
+        if orient == "hor":
+            return fn(gamma, m, *args, **kw)
+        if orient == "ver":
+            part = fn(transpose_gamma(gamma), m, *args, **kw)
+            rects = [type(r)(r.c0, r.c1, r.r0, r.r1) for r in part.rects]
+            return Partition(rects, (part.shape[1], part.shape[0]))
+        h = wrapped(gamma, m, *args, orient="hor", **kw)
+        v = wrapped(gamma, m, *args, orient="ver", **kw)
+        return h if h.max_load(gamma) <= v.max_load(gamma) else v
+
+    return wrapped
+
+
+def _default_pq(m: int) -> tuple[int, int]:
+    P = int(round(np.sqrt(m)))
+    if P * P != m:
+        raise ValueError(f"m={m} not square; pass P (and Q) explicitly")
+    return P, P
+
+
+# ---------------------------------------------------------------------------
+# P x Q-way jagged
+
+
+@_with_orientation
+def jag_pq_heur(gamma: np.ndarray, m: int, P: int | None = None,
+                Q: int | None = None) -> Partition:
+    if P is None or Q is None:
+        P, Q = _default_pq(m)
+    row_cuts = oned.optimal_1d(row_prefix(gamma), P)
+    col_cuts = [oned.optimal_1d(
+        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), Q)
+        for s in range(P)]
+    return _build(gamma, row_cuts, col_cuts)
+
+
+@_with_orientation
+def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
+               Q: int | None = None) -> Partition:
+    """Exact P x Q jagged: bisect L; probe greedily extends each stripe to
+    the largest row range whose optimal Q-way bottleneck is <= L (the cost
+    of a stripe is monotone non-decreasing in its row range)."""
+    if P is None or Q is None:
+        P, Q = _default_pq(m)
+    n1 = gamma.shape[0] - 1
+    rp = row_prefix(gamma)
+
+    def stripe_cost_fits(r0: int, r1: int, L: float) -> bool:
+        p = stripe_col_prefix(gamma, r0, r1)
+        return oned.probe_count(p, L, Q) <= Q
+
+    def probe_rows(L: float) -> np.ndarray | None:
+        cuts = np.empty(P + 1, dtype=np.int64)
+        cuts[0] = 0
+        b = 0
+        for i in range(1, P + 1):
+            if stripe_cost_fits(b, n1, L):
+                cuts[i:] = [b] * (P - i) + [n1]
+                return cuts
+            # largest e with stripe [b, e) packing into Q intervals <= L
+            lo, hi = b, n1
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if stripe_cost_fits(b, mid, L):
+                    lo = mid
+                else:
+                    hi = mid - 1
+            if lo <= b:
+                return None
+            cuts[i] = lo
+            b = lo
+        return None
+
+    total = float(gamma[-1, -1])
+    lo = total / m
+    heur = jag_pq_heur(gamma, m, P=P, Q=Q, orient="hor")
+    hi = heur.max_load(gamma)
+    best_cuts = probe_rows(hi)
+    assert best_cuts is not None
+    integral = np.issubdtype(gamma.dtype, np.integer)
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe_rows(mid)
+            if c is not None:
+                best_cuts, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = probe_rows(mid)
+            if c is not None:
+                best_cuts, hi = c, mid
+            else:
+                lo = mid
+    col_cuts = [oned.optimal_1d(
+        stripe_col_prefix(gamma, best_cuts[s], best_cuts[s + 1]), Q)
+        for s in range(P)]
+    return _build(gamma, best_cuts, col_cuts)
+
+
+# ---------------------------------------------------------------------------
+# m-way jagged
+
+
+def _proportional_counts(stripe_loads: np.ndarray, m: int) -> list[int]:
+    """Paper's allocation: ceil((m-P) * load/total), leftovers to the stripe
+    maximizing load / Q_S."""
+    P = len(stripe_loads)
+    total = float(stripe_loads.sum())
+    if total == 0:
+        counts = np.ones(P, dtype=np.int64)
+    else:
+        counts = np.ceil((m - P) * stripe_loads / total).astype(np.int64)
+        counts = np.maximum(counts, 1)
+    left = m - int(counts.sum())
+    for _ in range(max(left, 0)):
+        s = int(np.argmax(stripe_loads / counts))
+        counts[s] += 1
+    while counts.sum() > m:  # ceil overshoot (rare; shave lightest-loaded)
+        cands = np.where(counts > 1)[0]
+        s = cands[np.argmin(stripe_loads[cands] / counts[cands])]
+        counts[s] -= 1
+    return [int(c) for c in counts]
+
+
+@_with_orientation
+def jag_m_heur(gamma: np.ndarray, m: int, P: int | None = None) -> Partition:
+    if P is None:
+        P = max(int(round(np.sqrt(m))), 1)
+    P = min(P, m)
+    rp = row_prefix(gamma)
+    row_cuts = oned.optimal_1d(rp, P)
+    loads = (rp[row_cuts[1:]] - rp[row_cuts[:-1]]).astype(np.float64)
+    counts = _proportional_counts(loads, m)
+    col_cuts = [oned.optimal_1d(
+        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), counts[s])
+        for s in range(P)]
+    return _build(gamma, row_cuts, col_cuts)
+
+
+def jag_m_probe_given_stripes(gamma: np.ndarray, m: int,
+                              row_cuts: np.ndarray) -> Partition:
+    """JAG-M-PROBE: optimal counts + cuts for fixed main-dimension stripes."""
+    ps = [stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1])
+          for s in range(len(row_cuts) - 1)]
+    _, _, cuts = oned.nicol_multi(ps, m)
+    return _build(gamma, row_cuts, cuts)
+
+
+@_with_orientation
+def jag_m_heur_probe(gamma: np.ndarray, m: int,
+                     P: int | None = None) -> Partition:
+    """JAG-M-HEUR-PROBE: stripes from JAG-M-HEUR, allocation by JAG-M-PROBE."""
+    if P is None:
+        P = max(int(round(np.sqrt(m))), 1)
+    P = min(P, m)
+    row_cuts = oned.optimal_1d(row_prefix(gamma), P)
+    return jag_m_probe_given_stripes(gamma, m, row_cuts)
+
+
+@_with_orientation
+def jag_m_alloc(gamma: np.ndarray, m: int, counts: list[int] | None = None,
+                P: int | None = None) -> Partition:
+    """JAG-M-ALLOC: optimal stripe boundaries for a fixed ordered sequence of
+    per-stripe processor counts. DP over (stripe index, start row) with
+    binary search on the split (bi-monotonic objective)."""
+    n1 = gamma.shape[0] - 1
+    if counts is None:
+        # default: take counts from JAG-M-HEUR's proportional allocation
+        if P is None:
+            P = max(int(round(np.sqrt(m))), 1)
+        P = min(P, m)
+        rp = row_prefix(gamma)
+        rc = oned.optimal_1d(rp, P)
+        loads = (rp[rc[1:]] - rp[rc[:-1]]).astype(np.float64)
+        counts = _proportional_counts(loads, m)
+    if sum(counts) != m:
+        raise ValueError("counts must sum to m")
+    P = len(counts)
+
+    @functools.lru_cache(maxsize=None)
+    def stripe_cost(r0: int, r1: int, q: int) -> float:
+        p = stripe_col_prefix(gamma, r0, r1)
+        return oned.max_interval_load(p, oned.optimal_1d(p, q))
+
+    @functools.lru_cache(maxsize=None)
+    def f(s: int, r0: int) -> tuple[float, int]:
+        """Best bottleneck covering rows [r0, n1) with stripes s..P-1."""
+        if s == P - 1:
+            return stripe_cost(r0, n1, counts[s]), n1
+        # binary search: stripe_cost(r0, r, q) increases with r,
+        # f(s+1, r) decreases with r
+        lo, hi = r0, n1
+        best = (np.inf, n1)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            a = stripe_cost(r0, mid, counts[s])
+            bb = f(s + 1, mid)[0]
+            v = max(a, bb)
+            if v < best[0]:
+                best = (v, mid)
+            if a >= bb:
+                hi = mid
+            else:
+                lo = mid + 1
+        v = max(stripe_cost(r0, lo, counts[s]), f(s + 1, lo)[0])
+        if v < best[0]:
+            best = (v, lo)
+        return best
+
+    # backtrack
+    row_cuts = [0]
+    r = 0
+    for s in range(P - 1):
+        r = f(s, r)[1]
+        row_cuts.append(r)
+    row_cuts.append(n1)
+    col_cuts = [oned.optimal_1d(
+        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), counts[s])
+        for s in range(P)]
+    f.cache_clear(), stripe_cost.cache_clear()
+    return _build(gamma, np.asarray(row_cuts), col_cuts)
+
+
+@_with_orientation
+def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
+    """JAG-M-OPT: exact m-way jagged partition (paper Section 3.2.2 DP).
+
+    L(k, q) = min over k' < k, 1 <= x <= q of
+              max(L(k', q - x), opt1d(stripe[k', k), x)).
+    Pruning: (1) an upper bound from JAG-M-HEUR-PROBE kills branches early,
+    (2) per-(k', x) stripe costs are memoized, (3) x is capped by the number
+    of processors that can possibly help. Exponent is polynomial but heavy —
+    intended for small instances / benchmarking the heuristics' gap, exactly
+    like the paper (31 min at m=961 in their C++).
+    """
+    n1 = gamma.shape[0] - 1
+    rp = row_prefix(gamma)
+    ub = jag_m_heur_probe(gamma, m, orient="hor").max_load(gamma)
+    total = float(gamma[-1, -1])
+
+    @functools.lru_cache(maxsize=None)
+    def stripe_cost(r0: int, r1: int, q: int) -> float:
+        p = stripe_col_prefix(gamma, r0, r1)
+        return oned.max_interval_load(p, oned.optimal_1d(p, q))
+
+    @functools.lru_cache(maxsize=None)
+    def L(k: int, q: int) -> float:
+        """Optimal bottleneck for rows [0, k) on q processors."""
+        if k == 0:
+            return 0.0
+        if q <= 0:
+            return np.inf
+        load_k = float(rp[k] - rp[0])
+        if load_k == 0:
+            return 0.0
+        lb = load_k / q  # can never beat the average
+        best = np.inf
+        for x in range(1, q + 1):
+            if best <= lb * (1 + 1e-12):
+                break  # branch-and-bound: already at the lower bound
+            # lower bound on the last stripe cost with x procs: avg load /
+            # x over any suffix is at least (load of one row)/x... use 0.
+            # binary search on k': L(k', q-x) increases with k',
+            # stripe_cost(k', k, x) decreases with k'
+            lo, hi = 0, k - 1
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if L(mid, q - x) >= stripe_cost(mid, k, x):
+                    hi = mid
+                else:
+                    lo = mid + 1
+            for kp in (lo - 1, lo, lo + 1):
+                if kp < 0 or kp >= k:
+                    continue
+                v = max(L(kp, q - x), stripe_cost(kp, k, x))
+                if v < best:
+                    best = v
+        return best
+
+    # fill + backtrack
+    best_final = L(n1, m)
+
+    def backtrack(k: int, q: int) -> list[tuple[int, int, int]]:
+        """Return list of (r0, r1, x) stripes."""
+        if k == 0:
+            return []
+        target = L(k, q)
+        for x in range(1, q + 1):
+            for kp in range(k - 1, -1, -1):
+                v = max(L(kp, q - x), stripe_cost(kp, k, x))
+                if v <= target + 1e-9:
+                    return backtrack(kp, q - x) + [(kp, k, x)]
+        raise AssertionError("backtrack failed")
+
+    stripes = backtrack(n1, m)
+    row_cuts = [0] + [s[1] for s in stripes]
+    col_cuts = [oned.optimal_1d(
+        stripe_col_prefix(gamma, r0, r1), x) for r0, r1, x in stripes]
+    L.cache_clear(), stripe_cost.cache_clear()
+    return _build(gamma, np.asarray(row_cuts), col_cuts)

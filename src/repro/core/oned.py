@@ -1,0 +1,361 @@
+"""One-dimensional partitioning algorithms (paper Section 2.2).
+
+All functions operate on an *exclusive prefix-sum array* ``p`` of length
+``n+1`` (``p[0] == 0``, ``p[i] == a[:i].sum()``), so the load of interval
+``[b, e)`` is ``p[e] - p[b]``. A partition into ``m`` intervals is returned
+as a non-decreasing cut array of length ``m+1`` with ``cuts[0] == 0`` and
+``cuts[m] == n``. Empty intervals are allowed.
+
+Algorithms:
+
+- ``direct_cut``      -- DC / "Heuristic 1" of Miguet-Pierson; 2-approx,
+                         ``Lmax <= sum/m + max``.
+- ``recursive_bisection`` -- RB; same bound, O(m log n).
+- ``dp_optimal``      -- Manne-Olstad dynamic program (exact), with binary
+                         search over the bi-monotonic inner objective.
+- ``probe``           -- Han-Narahari-Choi greedy feasibility test for a
+                         target bottleneck L, O(m log n).
+- ``nicol_optimal``   -- exact bottleneck via Nicol's parametric search over
+                         realizable interval sums, with Pinar-Aykanat style
+                         bound tightening (the "NicolPlus" engineering).
+- ``probe_bisect_optimal`` -- exact-for-integer-loads bisection on L with
+                         ``probe`` (simple and fast; used as the default
+                         ``optimal_1d`` since our load matrices are integral).
+- ``probe_multi`` / ``nicol_multi`` -- PROBE-M and the multi-array optimal
+                         partitioner (paper Section 3.2.2), the engine of
+                         JAG-M-PROBE.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "direct_cut", "recursive_bisection", "dp_optimal", "probe",
+    "probe_count", "nicol_optimal", "probe_bisect_optimal", "optimal_1d",
+    "probe_multi", "nicol_multi", "cuts_to_intervals", "max_interval_load",
+]
+
+
+def cuts_to_intervals(cuts: np.ndarray) -> list[tuple[int, int]]:
+    return [(int(cuts[i]), int(cuts[i + 1])) for i in range(len(cuts) - 1)]
+
+
+def max_interval_load(p: np.ndarray, cuts: np.ndarray) -> float:
+    cuts = np.asarray(cuts)
+    return float((p[cuts[1:]] - p[cuts[:-1]]).max(initial=0))
+
+
+# ---------------------------------------------------------------------------
+# Heuristics
+
+
+def direct_cut(p: np.ndarray, m: int) -> np.ndarray:
+    """Greedy: each processor takes the smallest interval with load >= avg.
+
+    Vectorized form: cut i is the first index where p >= i * total / m,
+    which is exactly the greedy since p is non-decreasing.
+    """
+    n = len(p) - 1
+    total = p[-1]
+    targets = total / m * np.arange(1, m, dtype=np.float64)
+    cuts = np.empty(m + 1, dtype=np.int64)
+    cuts[0], cuts[m] = 0, n
+    cuts[1:m] = np.searchsorted(p, targets, side="left")
+    # monotonicity is automatic; clip to stay within [0, n]
+    np.clip(cuts, 0, n, out=cuts)
+    return cuts
+
+
+def recursive_bisection(p: np.ndarray, m: int) -> np.ndarray:
+    """RB: split into ~equal halves of load, recurse with m//2 / m - m//2."""
+    n = len(p) - 1
+    cuts = [0] * (m + 1)
+    cuts[m] = n
+
+    def rec(b: int, e: int, lo_proc: int, hi_proc: int) -> None:
+        k = hi_proc - lo_proc
+        if k <= 1 or e <= b:
+            for t in range(lo_proc + 1, hi_proc):
+                cuts[t] = e if e > b else b
+            return
+        m1 = k // 2
+        m2 = k - m1
+        # target split proportional to processor counts; try both (m1, m2)
+        # orders when k is odd and keep the better per-processor load.
+        best = None
+        for mm1, mm2 in {(m1, m2), (m2, m1)}:
+            target = p[b] + (p[e] - p[b]) * (mm1 / k)
+            s = int(np.searchsorted(p, target, side="left"))
+            for cand in (s - 1, s, s + 1):
+                cand = min(max(cand, b), e)
+                cost = max((p[cand] - p[b]) / mm1, (p[e] - p[cand]) / mm2)
+                if best is None or cost < best[0]:
+                    best = (cost, cand, mm1)
+        _, s, mm1 = best
+        cuts[lo_proc + mm1] = s
+        rec(b, s, lo_proc, lo_proc + mm1)
+        rec(s, e, lo_proc + mm1, hi_proc)
+
+    rec(0, n, 0, m)
+    return np.asarray(cuts, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Exact algorithms
+
+
+def dp_optimal(p: np.ndarray, m: int) -> np.ndarray:
+    """Manne-Olstad DP. f_j(i) = min_k max(f_{j-1}(k), p[i]-p[k]).
+
+    f_{j-1} is non-decreasing in k and p[i]-p[k] non-increasing, so the inner
+    min is over a bi-monotonic function: binary search. O(m n log n).
+    """
+    n = len(p) - 1
+    f = (p[1:n + 1] - p[0]).astype(np.float64)  # j = 1
+    arg = [np.zeros(n, dtype=np.int64)]
+    for _ in range(2, m + 1):
+        g = np.empty(n, dtype=np.float64)
+        ka = np.empty(n, dtype=np.int64)
+        for i in range(1, n + 1):
+            lo, hi = 0, i - 1
+            # find smallest k where f[k-1 -> index k-1] >= p[i] - p[k]
+            while lo < hi:
+                mid = (lo + hi) // 2
+                fmid = f[mid - 1] if mid > 0 else 0.0
+                if fmid >= p[i] - p[mid]:
+                    hi = mid
+                else:
+                    lo = mid + 1
+            best, bk = np.inf, lo
+            for k in (lo - 1, lo):
+                if k < 0 or k > i:
+                    continue
+                fk = f[k - 1] if k > 0 else 0.0
+                v = max(fk, float(p[i] - p[k]))
+                if v < best:
+                    best, bk = v, k
+            g[i - 1], ka[i - 1] = best, bk
+        f = g
+        arg.append(ka)
+    # backtrack
+    cuts = np.zeros(m + 1, dtype=np.int64)
+    cuts[m] = n
+    i = n
+    for j in range(m - 1, 0, -1):
+        i = int(arg[j][i - 1]) if i > 0 else 0
+        cuts[j] = i
+    return cuts
+
+
+def probe(p: np.ndarray, m: int, L: float) -> np.ndarray | None:
+    """Greedy feasibility: pack intervals of load <= L; None if infeasible.
+
+    Each step extends the current interval maximally via one binary search
+    on the prefix array (Han et al.), O(m log n).
+    """
+    n = len(p) - 1
+    cuts = np.empty(m + 1, dtype=np.int64)
+    cuts[0] = 0
+    b = 0
+    for i in range(1, m + 1):
+        if p[n] - p[b] <= L:  # remainder fits in one interval
+            cuts[i:] = [b] * (m - i) + [n]
+            return cuts
+        e = int(np.searchsorted(p, p[b] + L, side="right")) - 1
+        if e <= b:
+            return None  # single element exceeds L
+        cuts[i] = e
+        b = e
+    return None if b < n else cuts
+
+
+def probe_count(p: np.ndarray, L: float, cap: int, start: int = 0) -> int:
+    """#intervals of load <= L covering p[start:]; > cap returned as cap+1.
+
+    Works in-place on the full prefix array (no rebasing copy), so a call is
+    O(k log n) for k resulting intervals.
+    """
+    n = len(p) - 1
+    b, cnt = start, 0
+    while b < n:
+        if cnt >= cap:
+            return cap + 1
+        if p[n] - p[b] <= L:
+            return cnt + 1
+        e = int(np.searchsorted(p, p[b] + L, side="right")) - 1
+        if e <= b:
+            return cap + 1
+        b = e
+        cnt += 1
+    return max(cnt, 1)
+
+
+def _lower_bound(p: np.ndarray, m: int) -> float:
+    n = len(p) - 1
+    maxel = float((p[1:] - p[:-1]).max(initial=0))
+    return max(float(p[n]) / m, maxel)
+
+
+def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
+    """Exact optimal for integer loads: bisect L in [LB, UB] with ``probe``.
+
+    UB is the DirectCut bound sum/m + max (Section 2.2). ~log2(max) probes.
+    For float inputs this converges to within 1e-9 relative (documented).
+    """
+    n = len(p) - 1
+    if n == 0:
+        return np.zeros(m + 1, dtype=np.int64)
+    integral = np.issubdtype(p.dtype, np.integer)
+    lo = _lower_bound(p, m)
+    hi = float(p[n]) / m + float((p[1:] - p[:-1]).max(initial=0))
+    best = probe(p, m, hi)
+    assert best is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe(p, m, mid)
+            if c is not None:
+                best, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+        return best
+    while hi - lo > max(1e-9 * hi, 1e-12):
+        mid = 0.5 * (lo + hi)
+        c = probe(p, m, mid)
+        if c is not None:
+            best, hi = c, mid
+        else:
+            lo = mid
+    return best
+
+
+def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
+    """Nicol's parametric search: exact for arbitrary (float) loads.
+
+    For each leading processor j, in an optimal solution its interval is
+    either (a) the bottleneck -- then it is the *smallest* e with
+    Probe(L(b, e)) feasible for the remaining array/processors, giving the
+    candidate bottleneck L(b, e*); or (b) not the bottleneck -- then it can
+    safely be extended to e*-1 (the largest infeasible end) and we recurse.
+    The optimum is the best candidate seen along the chain (Nicol 1994;
+    engineering per Pinar-Aykanat 2004). O((m log n)^2)-ish.
+    """
+    n = len(p) - 1
+    best_L = float(p[n] - p[0])  # j covers everything candidate
+    b = 0
+    committed = 0.0
+    for j in range(1, m):
+        if b >= n:
+            break
+        k = m - j + 1  # processors available for suffix [b, n)
+        # NicolPlus-style range tightening (sound): feasibility needs
+        # L(b, e) >= suffix_total / k, so start the search there.
+        suffix_avg = float(p[n] - p[b]) / k
+        lo = int(np.searchsorted(p, p[b] + suffix_avg, side="left"))
+        lo = max(lo, b + 1)
+        hi = n
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if probe_count(p, float(p[mid] - p[b]), k, start=b) <= k:
+                hi = mid
+            else:
+                lo = mid + 1
+        cand = max(committed, float(p[lo] - p[b]))
+        if cand < best_L:
+            best_L = cand
+        # extend safely to lo - 1 and recurse on the suffix
+        nb = max(lo - 1, b)
+        committed = max(committed, float(p[nb] - p[b]))
+        b = nb
+    best_L = min(best_L, max(committed, float(p[n] - p[b])))
+    # float rounding in searchsorted(p[b] + L) can make the exact optimum
+    # infeasible by an ulp; bump epsilon-wise until the probe realizes it.
+    L = best_L
+    for _ in range(60):
+        cuts = probe(p, m, L)
+        if cuts is not None:
+            return cuts
+        L = np.nextafter(L, np.inf) + 1e-12 * max(abs(L), 1.0)
+    raise AssertionError("nicol_optimal: probe failed to realize optimum")
+
+
+def optimal_1d(p: np.ndarray, m: int) -> np.ndarray:
+    """Default exact 1D partitioner (probe-bisection; see module docstring)."""
+    return probe_bisect_optimal(p, m)
+
+
+# ---------------------------------------------------------------------------
+# Multi-array machinery (paper Section 3.2.2: PROBE-M / JAG-M-PROBE engine)
+
+
+def probe_multi(ps: list[np.ndarray], m: int, L: float) -> list[int] | None:
+    """PROBE-M: processors needed per array for bottleneck L; None if > m.
+
+    Every (non-empty) array needs at least one processor (its elements must
+    be covered by intervals inside that array).
+    """
+    counts = []
+    used = 0
+    for p in ps:
+        c = probe_count(p, L, m - used)
+        if used + c > m:
+            return None
+        counts.append(c)
+        used += c
+    return counts
+
+
+def nicol_multi(ps: list[np.ndarray], m: int
+                ) -> tuple[float, list[int], list[np.ndarray]]:
+    """Optimal multi-array partition: bisection on L with PROBE-M.
+
+    Returns (bottleneck, per-array processor counts summing to <= m,
+    per-array cut arrays). Exact for integer loads; 1e-9-relative for float.
+    After finding L*, leftover processors are spread greedily to the arrays
+    with the highest per-processor load (never hurts the bottleneck).
+    """
+    totals = np.array([float(p[-1]) for p in ps])
+    maxels = np.array([float((p[1:] - p[:-1]).max(initial=0)) for p in ps])
+    total = totals.sum()
+    if total == 0:
+        counts = [1] * len(ps)
+        cuts = [np.zeros(2, dtype=np.int64) for _ in ps]
+        for p, c in zip(ps, cuts):
+            c[1] = len(p) - 1
+        return 0.0, counts, cuts
+    if m < len(ps):
+        raise ValueError(f"need m >= #arrays, got m={m} arrays={len(ps)}")
+    lo = max(total / m, maxels.max(initial=0.0))
+    hi = float(totals.max(initial=0.0))  # one interval per array: feasible
+    integral = all(np.issubdtype(p.dtype, np.integer) for p in ps)
+    best_counts = probe_multi(ps, m, hi)
+    best_L = hi
+    assert best_counts is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe_multi(ps, m, mid)
+            if c is not None:
+                best_counts, best_L, hi_i = c, float(mid), mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = probe_multi(ps, m, mid)
+            if c is not None:
+                best_counts, best_L, hi = c, mid, mid
+            else:
+                lo = mid
+    # distribute leftover processors greedily by load-per-processor
+    counts = list(best_counts)
+    left = m - sum(counts)
+    for _ in range(left):
+        s = int(np.argmax(totals / np.array(counts, dtype=np.float64)))
+        counts[s] += 1
+    # realize each array's cuts optimally with its processor count
+    cuts = [optimal_1d(p, c) for p, c in zip(ps, counts)]
+    bott = max(max_interval_load(p, c) for p, c in zip(ps, cuts))
+    return bott, counts, cuts

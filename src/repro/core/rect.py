@@ -1,0 +1,117 @@
+"""Rectilinear (P x Q general block) partitions — paper Section 3.1.
+
+- RECT-UNIFORM: the MPI_Cart-style naive split balancing *area* not load.
+- RECT-NICOL:   Nicol's iterative refinement — alternately fix one
+  dimension's cuts and compute the optimal cuts of the other, where the
+  "load" of a column interval is the max over row stripes (and vice versa).
+  Interval loads are monotone by inclusion, so the probe machinery applies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import oned
+from .types import Partition, from_grid
+
+
+def rect_uniform(gamma: np.ndarray, m: int, P: int | None = None,
+                 Q: int | None = None) -> Partition:
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    if P is None or Q is None:
+        P = Q = int(round(np.sqrt(m)))
+        if P * Q != m:
+            raise ValueError(f"m={m} is not square; pass P and Q explicitly")
+    row_cuts = np.linspace(0, n1, P + 1).round().astype(np.int64)
+    col_cuts = np.linspace(0, n2, Q + 1).round().astype(np.int64)
+    return from_grid(row_cuts, col_cuts, (n1, n2))
+
+
+def _stripe_prefixes(gamma: np.ndarray, cuts: np.ndarray,
+                     axis: int) -> np.ndarray:
+    """(P, n+1) prefix arrays of each stripe along the *other* axis."""
+    if axis == 0:  # stripes are row intervals; arrays run over columns
+        return np.stack([gamma[cuts[s + 1], :] - gamma[cuts[s], :]
+                         for s in range(len(cuts) - 1)])
+    return np.stack([gamma[:, cuts[s + 1]] - gamma[:, cuts[s]]
+                     for s in range(len(cuts) - 1)])
+
+
+def _probe_max(ps: np.ndarray, k: int, L: float) -> np.ndarray | None:
+    """Probe for the 'max across stripes' interval-load structure.
+
+    ps: (P, n+1) stripe prefix arrays. Feasible cut e from b is the largest
+    e such that every stripe's interval load <= L, i.e. the min over stripes
+    of each stripe's own largest feasible e.
+    """
+    P, n1 = ps.shape
+    n = n1 - 1
+    cuts = np.empty(k + 1, dtype=np.int64)
+    cuts[0] = 0
+    b = 0
+    for i in range(1, k + 1):
+        if ((ps[:, n] - ps[:, b]) <= L).all():
+            cuts[i:] = [b] * (k - i) + [n]
+            return cuts
+        e = n
+        for s in range(P):
+            es = int(np.searchsorted(ps[s], ps[s, b] + L, side="right")) - 1
+            if es < e:
+                e = es
+        if e <= b:
+            return None
+        cuts[i] = e
+        b = e
+    return None
+
+
+def _optimal_cuts_given_fixed(gamma: np.ndarray, fixed_cuts: np.ndarray,
+                              fixed_axis: int, k: int) -> np.ndarray:
+    """Optimal 1D cuts of the free axis for the max-over-stripes load."""
+    ps = _stripe_prefixes(gamma, fixed_cuts, fixed_axis)
+    total_max = float((ps[:, -1] - ps[:, 0]).max(initial=0))
+    # element upper bound: max over stripes of largest single element
+    el = float((ps[:, 1:] - ps[:, :-1]).max(initial=0))
+    lo, hi = max(total_max / k, el), total_max
+    integral = np.issubdtype(ps.dtype, np.integer)
+    best = _probe_max(ps, k, hi)
+    assert best is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = _probe_max(ps, k, mid)
+            if c is not None:
+                best, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = _probe_max(ps, k, mid)
+            if c is not None:
+                best, hi = c, mid
+            else:
+                lo = mid
+    return best
+
+
+def rect_nicol(gamma: np.ndarray, m: int, P: int | None = None,
+               Q: int | None = None, max_iters: int = 50) -> Partition:
+    """Iterative refinement (Nicol '94 / Manne-Sorevik '96)."""
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    if P is None or Q is None:
+        P = Q = int(round(np.sqrt(m)))
+        if P * Q != m:
+            raise ValueError(f"m={m} is not square; pass P and Q explicitly")
+    # start from the uniform grid in the row dimension
+    row_cuts = np.linspace(0, n1, P + 1).round().astype(np.int64)
+    col_cuts = None
+    prev = None
+    for _ in range(max_iters):
+        col_cuts = _optimal_cuts_given_fixed(gamma, row_cuts, 0, Q)
+        row_cuts = _optimal_cuts_given_fixed(gamma, col_cuts, 1, P)
+        key = (row_cuts.tobytes(), col_cuts.tobytes())
+        if key == prev:
+            break
+        prev = key
+    return from_grid(row_cuts, col_cuts, (n1, n2))

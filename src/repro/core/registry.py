@@ -1,0 +1,75 @@
+"""Algorithm registry: name -> partitioner(gamma, m, **kw) -> Partition.
+
+Names follow the paper (Table 1). Jagged algorithms default to the -BEST
+orientation variant; append '-hor'/'-ver' for the fixed-orientation ones.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+from . import hier, hybrid, jagged, rect
+from .types import Partition
+
+_REGISTRY: dict[str, Callable[..., Partition]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable[..., Partition]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown algorithm {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def partition(name: str, gamma: np.ndarray, m: int, **kw) -> Partition:
+    p = get(name)(gamma, m, **kw)
+    if p.m_target is None:
+        p.m_target = m
+    return p
+
+
+_REGISTRY["rect-uniform"] = rect.rect_uniform
+_REGISTRY["rect-nicol"] = rect.rect_nicol
+
+for _name, _fn in [("jag-pq-heur", jagged.jag_pq_heur),
+                   ("jag-pq-opt", jagged.jag_pq_opt),
+                   ("jag-m-heur", jagged.jag_m_heur),
+                   ("jag-m-heur-probe", jagged.jag_m_heur_probe),
+                   ("jag-m-alloc", jagged.jag_m_alloc),
+                   ("jag-m-opt", jagged.jag_m_opt)]:
+    _REGISTRY[_name] = _fn
+    for _o in ("hor", "ver"):
+        _REGISTRY[f"{_name}-{_o}"] = functools.partial(_fn, orient=_o)
+
+for _v in ("load", "dist", "hor", "ver"):
+    _REGISTRY[f"hier-rb-{_v}"] = functools.partial(hier.hier_rb, variant=_v)
+    _REGISTRY[f"hier-relaxed-{_v}"] = functools.partial(
+        hier.hier_relaxed, variant=_v)
+_REGISTRY["hier-rb"] = functools.partial(hier.hier_rb, variant="load")
+_REGISTRY["hier-relaxed"] = functools.partial(hier.hier_relaxed,
+                                              variant="load")
+_REGISTRY["hier-opt"] = hier.hier_opt
+
+
+@register("hybrid")
+def _hybrid_default(gamma, m, P: int | None = None, **kw):
+    """HYBRID(JAG-M-HEUR / JAG-M-OPT) with JAG-M-HEUR-PROBE as the fast
+    phase-2 algorithm — the paper's best-performing configuration."""
+    p1 = functools.partial(jagged.jag_m_heur, orient="hor")
+    p2 = jagged.jag_m_opt
+    fast = functools.partial(jagged.jag_m_heur_probe, orient="hor")
+    if P is not None:
+        return hybrid.hybrid(gamma, m, p1, p2, P, phase2_fast=fast, **kw)
+    return hybrid.hybrid_auto(gamma, m, p1, p2, phase2_fast=fast, **kw)

@@ -1,0 +1,119 @@
+"""3D m-way jagged partitioning — the paper's Section 6 extension.
+
+"A jagged partitioning algorithm would partition the space along one
+dimension and perform a projection to obtain planes which will be
+partitioned in stripes and projected to one dimensional arrays" — exactly
+this: slabs along axis 0 (optimal 1D on the projected loads), proportional
+processor allocation per slab (the JAG-M rule), then a full 2D m-way
+jagged partition of each slab's projected (n2, n3) load.
+
+This beats projecting the whole 3D volume to 2D up-front (the paper's
+PIC-MAG preprocessing) because the slab partition can follow axis-0
+heterogeneity that projection destroys — measured in the test.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import oned
+from .jagged import _proportional_counts, jag_m_heur_probe
+from .prefix import prefix_sum_2d
+
+
+@dataclasses.dataclass(frozen=True)
+class Box:
+    """Half-open box [x0,x1) x [r0,r1) x [c0,c1)."""
+    x0: int
+    x1: int
+    r0: int
+    r1: int
+    c0: int
+    c1: int
+
+
+@dataclasses.dataclass
+class Partition3D:
+    boxes: list[Box]
+    shape: tuple[int, int, int]
+
+    def loads(self, A: np.ndarray) -> np.ndarray:
+        return np.array([A[b.x0:b.x1, b.r0:b.r1, b.c0:b.c1].sum()
+                         for b in self.boxes], dtype=np.float64)
+
+    def load_imbalance(self, A: np.ndarray, m: int | None = None) -> float:
+        m = m if m is not None else len(self.boxes)
+        total = float(A.sum())
+        if total == 0:
+            return 0.0
+        return float(self.loads(A).max()) / (total / m) - 1.0
+
+    def is_valid(self) -> bool:
+        paint = np.zeros(self.shape, dtype=np.int16)
+        for b in self.boxes:
+            paint[b.x0:b.x1, b.r0:b.r1, b.c0:b.c1] += 1
+        return bool((paint == 1).all())
+
+
+def jag_m_heur_3d(A: np.ndarray, m: int, P: int | None = None
+                  ) -> Partition3D:
+    """m-way jagged in 3D: slabs -> per-slab 2D m-way jagged.
+
+    As in the paper's orientation/-BEST variants, the slab count P is hard
+    to pick a priori (Theorem 4's parameters are unobservable), so when
+    unspecified we scan a few candidates and keep the best partition.
+    """
+    n1, n2, n3 = A.shape
+    if P is None:
+        cands = sorted({2, max(int(round(m ** (1 / 3))), 2),
+                        max(int(round(m ** 0.5)), 2)})
+        best = None
+        for Pc in cands:
+            if Pc > min(m, n1):
+                continue
+            part = jag_m_heur_3d(A, m, P=Pc)
+            li = part.load_imbalance(A, m)
+            if best is None or li < best[0]:
+                best = (li, part)
+        assert best is not None
+        return best[1]
+    P = min(P, m, n1)
+    slab_loads = A.sum(axis=(1, 2)).astype(np.int64)
+    p = np.concatenate([[0], np.cumsum(slab_loads)])
+    slab_cuts = oned.optimal_1d(p, P)
+    loads = (p[slab_cuts[1:]] - p[slab_cuts[:-1]]).astype(np.float64)
+    counts = _proportional_counts(loads, m)
+    boxes: list[Box] = []
+    for s in range(P):
+        x0, x1 = int(slab_cuts[s]), int(slab_cuts[s + 1])
+        if x1 <= x0:
+            continue
+        A2 = A[x0:x1].sum(axis=0)
+        g2 = prefix_sum_2d(A2)
+        part2 = jag_m_heur_probe(g2, counts[s], orient="hor")
+        for r in part2.rects:
+            boxes.append(Box(x0, x1, r.r0, r.r1, r.c0, r.c1))
+    return Partition3D(boxes, A.shape)
+
+
+def uniform_3d(A: np.ndarray, px: int, py: int, pz: int) -> Partition3D:
+    """The MPI_Cart-style baseline: an area-uniform 3D grid."""
+    n1, n2, n3 = A.shape
+    xs = np.linspace(0, n1, px + 1).round().astype(int)
+    ys = np.linspace(0, n2, py + 1).round().astype(int)
+    zs = np.linspace(0, n3, pz + 1).round().astype(int)
+    boxes = [Box(xs[i], xs[i + 1], ys[j], ys[j + 1], zs[k], zs[k + 1])
+             for i in range(px) for j in range(py) for k in range(pz)]
+    return Partition3D(boxes, A.shape)
+
+
+def project_then_2d(A: np.ndarray, m: int) -> Partition3D:
+    """The paper's PIC-MAG preprocessing: project axis 0 away, partition
+    in 2D, extrude — the suboptimal baseline Section 6 warns about."""
+    n1 = A.shape[0]
+    A2 = A.sum(axis=0)
+    g2 = prefix_sum_2d(A2)
+    part2 = jag_m_heur_probe(g2, m, orient="hor")
+    boxes = [Box(0, n1, r.r0, r.r1, r.c0, r.c1) for r in part2.rects]
+    return Partition3D(boxes, A.shape)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-resident).
+
+Why it exists (EXPERIMENTS.md §Roofline): the pure-JAX chunked attention
+is the dominant *memory* term of every training/prefill cell — XLA
+materializes the f32 score tensor and re-reads it for bias/mask/exp as
+separate passes. This kernel keeps the (qc x kc) score tile and the
+running (m, l, acc) online-softmax state in VMEM; HBM sees only q, k, v
+and the output — the roofline memory term drops to the operand floor.
+
+TPU-native design:
+- grid (BH, nq, nk), nk innermost: the kv loop runs sequentially per q
+  tile while (m, l, acc) persist in VMEM scratch; out is written once at
+  the last kv step.
+- tiles default to (qc, d) = (512, head_dim) and (kc, d) = (512, head_dim):
+  MXU-aligned (multiples of 128 in the contracted dim for f32/bf16) and
+  ~0.5-1.5 MiB of VMEM working set.
+- causal / sliding-window masks are built from global iota per tile; a
+  whole-tile skip (`pl.when`) avoids the matmuls for fully-masked tiles —
+  the causal FLOP halving the XLA fallback cannot express.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            qc: int, kc: int, nk: int, sq: int, skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * qc
+    k_start = ki * kc
+    # tile-level skip: in causal mode a tile strictly above the diagonal
+    # (and, with a window, strictly left of it) contributes nothing
+    needed = True
+    if causal:
+        needed = k_start <= q_start + qc - 1
+    if window > 0:
+        needed = needed & (k_start + kc - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (qc, d)
+        k = k_ref[0].astype(jnp.float32)          # (kc, d)
+        v = v_ref[0].astype(jnp.float32)          # (kc, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (qc, kc)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        iq = q_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        jk = k_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+        ok = jk < skv
+        ok &= iq < sq
+        if causal:
+            ok &= jk <= iq
+        if window > 0:
+            ok &= iq - jk < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (qc, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(ok, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)             # (qc, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "qc", "kc", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    qc: int = 512, kc: int = 512,
+                    interpret: bool = False):
+    """q, k, v: (BH, S, d) flattened batch*heads. Returns (BH, Sq, d)."""
+    BH, Sq, d = q.shape
+    Skv = k.shape[1]
+    if scale is None:
+        scale = float(d) ** -0.5
+    qc = min(qc, Sq)
+    kc = min(kc, Skv)
+    pq, pk = (-Sq) % qc, (-Skv) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, qc=qc, kc=kc, nk=nk, sq=Sq, skv=Skv),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kc, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

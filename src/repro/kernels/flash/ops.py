@@ -1,0 +1,31 @@
+"""Public jit'd wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "use_pallas", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, use_pallas: bool = True,
+              interpret: bool = True):
+    """(B, S, H, d) attention via the flash kernel (heads folded into the
+    grid). ``interpret=True`` on this CPU container; False on real TPU."""
+    B, Sq, H, d = q.shape
+    Skv = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+    if use_pallas:
+        of = flash_attention(qf, kf, vf, causal=causal, window=window,
+                             softcap=softcap, interpret=interpret)
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal, window=window,
+                           softcap=softcap)
+    return of.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

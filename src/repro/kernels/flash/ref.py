@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: float | None = None):
+    """q, k, v: (BH, S, d) flattened (batch*heads). Dense softmax attention
+    with optional causal mask, sliding window and logit softcap."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    iq = jnp.arange(Sq)[:, None]
+    jk = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= jk <= iq
+    if window > 0:
+        ok &= iq - jk < window
+    s = jnp.where(ok[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(v.dtype)

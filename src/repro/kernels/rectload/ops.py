@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for jagged-partition load evaluation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .rectload import jagged_loads_pallas
+from .ref import jagged_loads_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def jagged_loads(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
+                 col_cuts: jnp.ndarray, *, use_pallas: bool = True,
+                 interpret: bool = True) -> jnp.ndarray:
+    if not use_pallas:
+        return jagged_loads_ref(gamma, row_cuts, col_cuts).astype(jnp.float32)
+    return jagged_loads_pallas(gamma, row_cuts, col_cuts,
+                               interpret=interpret)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: jagged-partition rectangle loads from Gamma.
+
+Evaluating the loads of all m rectangles of a jagged partition is the inner
+loop of every probe/refinement step. On GPU this is a scatter/gather; TPUs
+dislike arbitrary gathers, so we restructure it TPU-natively:
+
+- **Data-dependent row blocks via scalar prefetch**: the stripe boundaries
+  ``row_cuts`` are a scalar-prefetch operand, and the BlockSpec index_map
+  picks the two Gamma rows each stripe needs — the DMA engine streams
+  exactly 2 x (1, bn) rows per grid step out of HBM, never the full table.
+- **Gather -> masked matvec on the MXU**: the per-stripe load vector is
+  ``d @ stripe_prefix`` where ``d[q, j] = [j == cc[q+1]] - [j == cc[q]]``.
+  The +-1 one-hot-difference matrix is built in VREGs per (stripe, column
+  block) and immediately contracted — the O(P*Q*n2) mask XLA would
+  materialize never exists.
+
+Grid: (P, n_col_blocks); the column-block axis is innermost and accumulates
+into the (1, Q) output block for the stripe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(row_cuts_ref, g_lo_ref, g_hi_ref, col_cuts_ref, o_ref, *,
+            bn: int, n_cols: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    chunk = (g_hi_ref[0, :] - g_lo_ref[0, :]).astype(jnp.float32)  # (bn,)
+    jglob = c * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    # guard the zero-pad tail: indices past n_cols never match a cut
+    jglob = jnp.where(jglob < n_cols, jglob, -2)
+    cc = col_cuts_ref[0, :]  # (Qp1,)
+    hi = (jglob == cc[1:, None]).astype(jnp.float32)   # (Q, bn)
+    lo = (jglob == cc[:-1, None]).astype(jnp.float32)  # (Q, bn)
+    d = hi - lo
+    o_ref[0, :] += jnp.dot(d, chunk, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def jagged_loads_pallas(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
+                        col_cuts: jnp.ndarray, *, bn: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """(P, Q) rectangle loads of a jagged partition; see module docstring."""
+    n1p, n2p = gamma.shape
+    P = row_cuts.shape[0] - 1
+    Qp1 = col_cuts.shape[1]
+    pad = (-n2p) % bn
+    g = jnp.pad(gamma.astype(jnp.float32), ((0, 0), (0, pad)))
+    ncb = g.shape[1] // bn
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, ncb),
+        in_specs=[
+            # Gamma row below the stripe: row index row_cuts[s]
+            pl.BlockSpec((1, bn), lambda s, c, rc: (rc[s], c)),
+            # Gamma row at the top of the next stripe: row_cuts[s + 1]
+            pl.BlockSpec((1, bn), lambda s, c, rc: (rc[s + 1], c)),
+            # this stripe's column cuts
+            pl.BlockSpec((1, Qp1), lambda s, c, rc: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Qp1 - 1), lambda s, c, rc: (s, 0)),
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, bn=bn, n_cols=n2p),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, Qp1 - 1), jnp.float32),
+        interpret=interpret,
+    )
+    return kernel(row_cuts.astype(jnp.int32), g, g,
+                  col_cuts.astype(jnp.int32))

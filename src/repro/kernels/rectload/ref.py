@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the rectload kernel."""
+import jax.numpy as jnp
+
+
+def jagged_loads_ref(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
+                     col_cuts: jnp.ndarray) -> jnp.ndarray:
+    """Loads of a jagged partition.
+
+    gamma: (n1+1, n2+1) exclusive 2D prefix sums.
+    row_cuts: (P+1,) int32 stripe boundaries.
+    col_cuts: (P, Q+1) int32 per-stripe column cuts.
+    Returns (P, Q) loads: L[s, q] = sum of A[rc[s]:rc[s+1], cc[s,q]:cc[s,q+1]].
+    """
+    hi = jnp.take(gamma, row_cuts[1:], axis=0)   # (P, n2+1)
+    lo = jnp.take(gamma, row_cuts[:-1], axis=0)  # (P, n2+1)
+    stripe_prefix = hi - lo                      # (P, n2+1)
+    vals = jnp.take_along_axis(stripe_prefix, col_cuts, axis=1)  # (P, Q+1)
+    return vals[:, 1:] - vals[:, :-1]

@@ -1,0 +1,31 @@
+"""Public jit'd wrappers around the SAT kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import gamma_ref, sat_ref
+from .sat import sat_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def sat(a: jnp.ndarray, *, use_pallas: bool = True,
+        interpret: bool = True) -> jnp.ndarray:
+    """Inclusive 2D prefix sum. ``interpret=True`` runs the Pallas kernel
+    body on CPU (this container); on real TPU pass ``interpret=False``."""
+    if not use_pallas:
+        return sat_ref(a)
+    return sat_pallas(a, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gamma(a: jnp.ndarray, *, use_pallas: bool = True,
+          interpret: bool = True) -> jnp.ndarray:
+    """The paper's Gamma array: exclusive prefix, shape (n1+1, n2+1)."""
+    if not use_pallas:
+        return gamma_ref(a)
+    s = sat_pallas(a, interpret=interpret)
+    out = jnp.zeros((a.shape[0] + 1, a.shape[1] + 1), dtype=s.dtype)
+    return out.at[1:, 1:].set(s)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the summed-area table kernel."""
+import jax.numpy as jnp
+
+
+def sat_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive 2D prefix sum: out[i, j] = a[:i+1, :j+1].sum()."""
+    return jnp.cumsum(jnp.cumsum(a, axis=0), axis=1)
+
+
+def gamma_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive 2D prefix sum (the paper's Gamma), shape (n1+1, n2+1)."""
+    s = sat_ref(a)
+    out = jnp.zeros((a.shape[0] + 1, a.shape[1] + 1), dtype=s.dtype)
+    return out.at[1:, 1:].set(s)

@@ -1,0 +1,129 @@
+"""Step functions (train / prefill / decode) with their sharding specs.
+
+Each builder returns (jitted_fn, example_args_specs) ready for
+``fn.lower(*specs).compile()`` — ShapeDtypeStructs only, no allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.dist import sharding as shd
+from repro.launch.cells import SHAPES, Shape
+from repro.models import api
+from repro.train import optim
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(cfg, opt_cfg: optim.AdamWConfig):
+    model = api.build(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, om = optim.apply(opt_cfg, params, opt_state, grads)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def build_train(arch: str, shape: Shape, mesh,
+                opt_cfg: optim.AdamWConfig | None = None,
+                overrides: dict | None = None):
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    if opt_cfg is None:
+        # bf16 moments for the 200B+ model so state fits 16 GB/chip HBM
+        big = api.count_params(cfg) > 1e11
+        opt_cfg = optim.AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32")
+    model = api.build(cfg)
+
+    pspec = api.param_spec(cfg)
+    p_sh = shd.param_specs(cfg, mesh, pspec)
+    o_sh = optim.state_specs(p_sh, opt_cfg)
+    batch = api.train_batch_spec(cfg, shape.global_batch, shape.seq_len)
+    b_sh = shd.batch_specs(cfg, mesh, batch)
+    ospec = jax.eval_shape(functools.partial(optim.init, opt_cfg), pspec)
+
+    step = make_train_step(cfg, opt_cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_named(mesh, p_sh), _named(mesh, o_sh),
+                      _named(mesh, b_sh)),
+        out_shardings=(_named(mesh, p_sh), _named(mesh, o_sh), None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (pspec, ospec, batch)
+
+
+def build_prefill(arch: str, shape: Shape, mesh,
+                  overrides: dict | None = None):
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    model = api.build(cfg)
+    pspec = api.param_spec(cfg)
+    p_sh = shd.param_specs(cfg, mesh, pspec, fsdp=cfg.serve_fsdp_params)
+    batch = api.prefill_batch_spec(cfg, shape.global_batch, shape.seq_len)
+    b_sh = shd.batch_specs(cfg, mesh, batch)
+    cspec = api.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    c_sh = shd.cache_specs(cfg, mesh, cspec)
+
+    jitted = jax.jit(
+        lambda p, b, c: model.prefill(p, b, c),
+        in_shardings=(_named(mesh, p_sh), _named(mesh, b_sh),
+                      _named(mesh, c_sh)),
+        out_shardings=(None, _named(mesh, c_sh)),
+        donate_argnums=(2,),
+    )
+    return jitted, (pspec, batch, cspec)
+
+
+def build_decode(arch: str, shape: Shape, mesh,
+                 overrides: dict | None = None):
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    model = api.build(cfg)
+    pspec = api.param_spec(cfg)
+    p_sh = shd.param_specs(cfg, mesh, pspec, fsdp=cfg.serve_fsdp_params)
+    toks, pos = api.decode_inputs_spec(cfg, shape.global_batch)
+    t_sh = shd.batch_specs(cfg, mesh, {"t": toks})["t"]
+    pos_sh = shd.batch_specs(cfg, mesh, {"p": pos})["p"]
+    cspec = api.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    c_sh = shd.cache_specs(cfg, mesh, cspec)
+
+    jitted = jax.jit(
+        lambda p, t, pp, c: model.decode(p, t, pp, c),
+        in_shardings=(_named(mesh, p_sh), _named(mesh, t_sh),
+                      _named(mesh, pos_sh), _named(mesh, c_sh)),
+        out_shardings=(None, _named(mesh, c_sh)),
+        donate_argnums=(3,),
+    )
+    return jitted, (pspec, toks, pos, cspec)
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               overrides: dict | None = None):
+    """Returns (jitted_fn, arg_specs) for one dry-run cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        f, (p, o, b) = build_train(arch, shape, mesh, overrides=overrides)
+        return f, (p, o, b)
+    if shape.kind == "prefill":
+        f, (p, b, c) = build_prefill(arch, shape, mesh, overrides=overrides)
+        return f, (p, b, c)
+    f, (p, t, pos, c) = build_decode(arch, shape, mesh, overrides=overrides)
+    return f, (p, t, pos, c)

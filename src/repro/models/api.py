@@ -1,0 +1,116 @@
+"""Unified model API: every architecture exposes the same five functions.
+
+``build(cfg)`` returns a ``Model`` namespace with:
+  init(key) -> params
+  loss(params, batch) -> (loss, metrics)          # train objective
+  prefill(params, batch, cache) -> (logits, cache)
+  decode(params, tokens, pos, cache) -> (logits, cache)
+  init_cache(batch_size, ctx) -> cache pytree
+plus ``batch_spec(shape)`` giving ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b: encdec.loss_fn(p, cfg, b),
+            prefill=lambda p, b, c: encdec.prefill(
+                p, cfg, b["frames"], b["tokens"], c),
+            decode=lambda p, t, pos, c: encdec.decode_step(p, cfg, t, pos, c),
+            init_cache=lambda bsz, ctx: encdec.init_cache(cfg, bsz, ctx),
+        )
+
+    def _prefill(p, b, c):
+        return lm.prefill(p, cfg, b["tokens"], c,
+                          prefix_embeds=b.get("prefix_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_params(key, cfg),
+        loss=lambda p, b: lm.loss_fn(p, cfg, b),
+        prefill=_prefill,
+        decode=lambda p, t, pos, c: lm.decode_step(p, cfg, t, pos, c),
+        init_cache=lambda bsz, ctx: lm.init_cache(cfg, bsz, ctx),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; nothing is allocated)
+
+
+def train_batch_spec(cfg: ModelConfig, global_batch: int, seq_len: int):
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (global_batch, cfg.encoder_len, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+            "labels": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+        }
+    if cfg.family == "vlm":
+        text = seq_len - cfg.vision_len
+        return {
+            "prefix_embeds": jax.ShapeDtypeStruct(
+                (global_batch, cfg.vision_len, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((global_batch, text), i32),
+            "labels": jax.ShapeDtypeStruct((global_batch, text), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), i32),
+    }
+
+
+def prefill_batch_spec(cfg: ModelConfig, global_batch: int, seq_len: int):
+    spec = train_batch_spec(cfg, global_batch, seq_len)
+    spec.pop("labels")
+    return spec
+
+
+def decode_inputs_spec(cfg: ModelConfig, global_batch: int):
+    return (jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),   # tokens
+            jax.ShapeDtypeStruct((global_batch,), jnp.int32))     # positions
+
+
+def cache_spec(cfg: ModelConfig, global_batch: int, ctx: int):
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init_cache(global_batch, ctx))
+
+
+def param_spec(cfg: ModelConfig):
+    model = build(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init, key)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    spec = param_spec(cfg)
+    total = 0
+    for x in jax.tree.leaves(spec):
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        total += n
+    return total

@@ -1,0 +1,482 @@
+"""Shared neural layers (pure JAX): norms, rope, chunked attention, MLP, MoE.
+
+Everything here is jit/pjit-friendly: static shapes, lax control flow, f32
+softmax/norm accumulations with bf16 weights/activations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / jnp.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, dh); positions: (B, S) int32. HF rotate-half convention."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))            # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention, pure JAX
+
+
+def _mask_bias(iq, jk, *, causal: bool, window) -> jnp.ndarray:
+    """iq: (B, qc), jk: (B, kc) global positions (-1 = padding). Returns
+    additive bias (B, qc, kc) of 0 / -inf. ``window`` is a traced int32
+    scalar; <= 0 disables the sliding-window constraint."""
+    ok = (jk >= 0)[:, None, :]
+    d = iq[:, :, None] - jk[:, None, :]
+    if causal:
+        ok &= d >= 0
+    win_ok = (d < window) | (window <= 0)
+    ok &= win_ok
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool, window,
+                      softcap: float, scale: float, q_chunk: int,
+                      kv_chunk: int, band_window: int = 0) -> jnp.ndarray:
+    """Memory-efficient attention with online softmax.
+
+    q, k, v: (B, S, H, d) with a FLAT, equal head count (callers repeat GQA
+    KV heads first — keeping the head axis intact lets GSPMD shard it over
+    'model' instead of silently replicating the quadratic work). MQA
+    (k/v with a single head, e.g. the MLA latent cache) broadcasts in the
+    einsum without materializing the repeat.
+    q_pos: (B, Sq); kv_pos: (B, Skv) with -1 marking invalid cache slots.
+    Never materializes more than (B, H, qc, kc) logits.
+    """
+    B, Sq, H, dk = q.shape
+    _, Skv, Hkv, dv = v.shape
+    mqa = (Hkv == 1 and H > 1)
+
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    pq = (-Sq) % qc
+    pk = (-Skv) % kc
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pk)), constant_values=-1)
+    nq, nk = q.shape[1] // qc, k.shape[1] // kc
+
+    from repro.dist.ctx import constrain
+    qb = q.reshape(B, nq, qc, H, dk).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(B, nq, qc).transpose(1, 0, 2)
+    kb = k.reshape(B, nk, kc, Hkv, dk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kc, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    kpb = kv_pos.reshape(B, nk, kc).transpose(1, 0, 2)
+    from repro.dist.ctx import current_mesh
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if Sq > 1:
+        if H % tp == 0 and Hkv % tp == 0:
+            # pin the chunk stacks head-sharded so the kv scan does not
+            # reshard per step. ONLY when the head axis actually divides
+            # the TP axis — otherwise the pin forces replication and costs
+            # 4-15x (hymba/whisper regression, §Perf iteration B2b).
+            qb = constrain(qb, None, "dp", None, "model", None)
+            kb = constrain(kb, None, "dp", None, "model", None)
+            vb = constrain(vb, None, "dp", None, "model", None)
+    else:
+        # decode: chunks stay sequence-sharded over 'model'
+        kb = constrain(kb, None, "dp", "model", None, None)
+        vb = constrain(vb, None, "dp", "model", None, None)
+
+    # static band for uniform sliding-window prefill: q block i only needs
+    # kv blocks within [i*qc - band_window, i*qc + qc) — provably-masked
+    # chunks are skipped entirely (correctness still guarded by the
+    # position masks, so clamping is safe). §Perf iteration D1.
+    band = 0
+    if band_window > 0 and causal and Sq > 1:
+        band = min(-(-band_window // kc) + -(-qc // kc) + 1, nk)
+
+    def q_block(args):
+        qi, qp, iq_blk = args  # (B, qc, H, dk), (B, qc), scalar index
+        m0 = jnp.full((B, H, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, dv), jnp.float32)
+
+        if band:
+            first_needed = (iq_blk * qc - (band_window - 1)) // kc
+            start = jnp.clip(first_needed, 0, nk - band)
+            kbb = jax.lax.dynamic_slice_in_dim(kb, start, band, axis=0)
+            vbb = jax.lax.dynamic_slice_in_dim(vb, start, band, axis=0)
+            kpb_b = jax.lax.dynamic_slice_in_dim(kpb, start, band, axis=0)
+        else:
+            kbb, vbb, kpb_b = kb, vb, kpb
+
+        @jax.checkpoint  # flash-style: recompute probs in the backward
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, vi, kp = kv
+            if mqa:
+                s = jnp.einsum("bqhd,bkd->bhqk", qi.astype(jnp.float32),
+                               ki[:, :, 0].astype(jnp.float32)) * scale
+            else:
+                s = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                               ki.astype(jnp.float32)) * scale
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            bias = _mask_bias(qp, kp, causal=causal, window=window)
+            s = s + bias[:, None, :, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            if mqa:
+                pv = jnp.einsum("bhqk,bkd->bhqd", p,
+                                vi[:, :, 0].astype(jnp.float32))
+            else:
+                pv = jnp.einsum("bhqk,bkhd->bhqd", p,
+                                vi.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kbb, vbb, kpb_b))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)  # (B, qc, H, dv)
+
+    out = jax.lax.map(q_block, (qb, qpb, jnp.arange(nq, dtype=jnp.int32)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, d) -> (B, S, Hkv * n_rep, d), grouped-query expansion."""
+    if n_rep == 1:
+        return k
+    B, S, Hkv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hkv, n_rep, d))
+    return k.reshape(B, S, Hkv * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache handling)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H, dh), d, dtype),
+        "wk": dense_init(ks[1], (d, Hkv, dh), d, dtype),
+        "wv": dense_init(ks[2], (d, Hkv, dh), d, dtype),
+        "wo": dense_init(ks[3], (H, dh, d), H * dh, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def attn_forward(p: Params, cfg: ModelConfig, x, positions, *, window,
+                 cache=None, cache_index=None):
+    """GQA attention. Training/prefill when cache is None or being filled.
+
+    cache: dict(k=(B, Sc, Hkv, dh), v=..., pos=(B, Sc)) or None.
+    cache_index: traced int32 scalar — next write slot (decode) or 0
+    (prefill). Returns (out, new_cache).
+    """
+    from repro.dist.ctx import constrain
+    B, S, d = x.shape
+    rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "dp", None, "model", None)
+
+    new_cache = None
+    if cache is not None:
+        Sc = cache["k"].shape[1]
+        # rolling writes: slot = pos % Sc (bounded windows wrap; full caches
+        # have Sc >= max context so slot == pos). Prefill (S > 1) writes
+        # only its last Sc entries so every slot is written at most once
+        # (duplicate-index scatter order is undefined in XLA).
+        W = min(S, Sc)
+        kw, vw, pw = k[:, S - W:], v[:, S - W:], positions[:, S - W:]
+        if S > 1 and (Sc >= S or (W == Sc and S % Sc == 0)):
+            # contiguous prefill write: dynamic-update-slice partitions
+            # cleanly under GSPMD; the gather-scatter form all-gathers the
+            # whole sequence-sharded cache per layer (§Perf iteration B3)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, 0, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(cache["pos"], pw, (0, 0))
+        else:
+            slots = pw % Sc
+            bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+            ck = cache["k"].at[bidx, slots].set(kw)
+            cv = cache["v"].at[bidx, slots].set(vw)
+            cpos = cache["pos"].at[bidx, slots].set(pw)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if S == 1:  # decode: attend over the cache
+            k_all, v_all, kv_pos = ck, cv, cpos
+        else:       # prefill: attend over this call's full-length k/v
+            k_all, v_all, kv_pos = k, v, positions
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    # flat-head GQA: repeat KV so the head axis shards over 'model' for
+    # compute-bound shapes; decode keeps the cache sequence-sharded instead
+    decode_like = cache is not None and S == 1
+    if decode_like:
+        k_all = constrain(repeat_kv(k_all, rep), "dp", "model", None, None)
+        v_all = constrain(repeat_kv(v_all, rep), "dp", "model", None, None)
+    else:
+        k_all = constrain(repeat_kv(k_all, rep), "dp", None, "model", None)
+        v_all = constrain(repeat_kv(v_all, rep), "dp", None, "model", None)
+    # banded prefill/train only for uniform sliding-window archs (the
+    # window must be a static layer-independent bound)
+    band_window = (cfg.sliding_window
+                   if cfg.sliding_window > 0 and cfg.global_every == 0
+                   else 0)
+    out = chunked_attention(
+        q, k_all, v_all, positions, kv_pos, causal=True, window=window,
+        softcap=cfg.attn_softcap, scale=cfg.head_dim ** -0.5,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        band_window=band_window if not decode_like else 0)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2)
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora_rank), d, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, H, qk),
+                           cfg.q_lora_rank, dtype),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                            d, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], (cfg.kv_lora_rank, H,
+                                    cfg.qk_nope_dim + cfg.v_head_dim),
+                            cfg.kv_lora_rank, dtype),
+        "wo": dense_init(ks[4], (H, cfg.v_head_dim, d),
+                         H * cfg.v_head_dim, dtype),
+    }
+    return p
+
+
+def mla_forward(p: Params, cfg: ModelConfig, x, positions, *, window,
+                cache=None, cache_index=None, absorb: bool = False):
+    """Multi-head latent attention. The cache stores only the compressed
+    latent (kv_lora) + shared rope key — the paper-faithful memory saving.
+
+    absorb=True uses the w_kv_b-absorbed decode path: attention runs in the
+    512-dim latent space and the per-head expansion never touches the cache.
+    """
+    from repro.dist.ctx import constrain
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (nope + rdim) ** -0.5
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])
+    q = constrain(q, "dp", None, "model", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c = rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 head
+
+    new_cache = None
+    if cache is not None:
+        Sc = cache["c"].shape[1]
+        W = min(S, Sc)
+        cw = c[:, S - W:]
+        rw = k_rope[:, S - W:, 0, :]
+        pw = positions[:, S - W:]
+        if S > 1 and (Sc >= S or (W == Sc and S % Sc == 0)):
+            cc = jax.lax.dynamic_update_slice(cache["c"], cw, (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(cache["kr"], rw, (0, 0, 0))
+            cp = jax.lax.dynamic_update_slice(cache["pos"], pw, (0, 0))
+        else:
+            slots = pw % Sc
+            bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+            cc = cache["c"].at[bidx, slots].set(cw)
+            cr = cache["kr"].at[bidx, slots].set(rw)
+            cp = cache["pos"].at[bidx, slots].set(pw)
+        new_cache = {"c": cc, "kr": cr, "pos": cp}
+        if S == 1:
+            c_all, kr_all, kv_pos = cc, cr, cp
+        else:
+            c_all, kr_all, kv_pos = c, k_rope[:, :, 0, :], positions
+    else:
+        c_all, kr_all, kv_pos = c, k_rope[:, :, 0, :], positions
+
+    if absorb:
+        # fold wkv_b's key half into q; attend in latent space
+        wk = p["wkv_b"][..., :nope]                     # (r, H, nope)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk)  # (B,S,H,r)
+        q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+        k_cat = jnp.concatenate([c_all, kr_all], axis=-1)[:, :, None, :]
+        out_lat = chunked_attention(
+            q_cat, k_cat, c_all[:, :, None, :], positions, kv_pos,
+            causal=True, window=window, softcap=0.0, scale=scale,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)  # (B,S,H,r)
+        wv = p["wkv_b"][..., nope:]                      # (r, H, v)
+        out = jnp.einsum("bshr,rhv->bshv", out_lat, wv)
+    else:
+        kvu = jnp.einsum("bsr,rhk->bshk", c_all, p["wkv_b"])
+        kvu = constrain(kvu, "dp", None, "model", None)
+        k_nope, v = kvu[..., :nope], kvu[..., nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      (*k_nope.shape[:3], rdim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            q_full, k_full, v, positions, kv_pos, causal=True, window=window,
+            softcap=0.0, scale=scale, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("silu", "geglu"):  # gated
+        return {"w1": dense_init(ks[0], (d, f), d, dtype),
+                "w3": dense_init(ks[1], (d, f), d, dtype),
+                "w2": dense_init(ks[2], (f, d), f, dtype)}
+    return {"w1": dense_init(ks[0], (d, f), d, dtype),
+            "w2": dense_init(ks[2], (f, d), f, dtype)}
+
+
+def mlp_forward(p: Params, cfg: ModelConfig, x) -> jnp.ndarray:
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w1"]) * (x @ p["w3"])
+    else:  # plain gelu (whisper)
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style one-hot dispatch, small token groups)
+
+
+def moe_capacity(cfg: ModelConfig) -> int:
+    slots = cfg.moe_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor
+    return max(8, int(-(-slots // 8) * 8))  # ceil to multiple of 8
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), d, jnp.float32),
+        "w1": dense_init(ks[1], (E, d, f), d, dtype),
+        "w3": dense_init(ks[2], (E, d, f), d, dtype),
+        "w2": dense_init(ks[3], (E, f, d), f, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, dtype,
+                               d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_forward(p: Params, cfg: ModelConfig, x) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, aux_loss). x: (B, S, d)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group, B * S)
+    T = B * S
+    G = T // g
+    assert G * g == T, f"moe_group {g} must divide tokens {T}"
+    xg = x.reshape(G, g, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, ids = jax.lax.top_k(probs, k)                      # (G, g, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    oh = jax.nn.one_hot(ids, E, dtype=jnp.float32)            # (G, g, k, E)
+    fe = jnp.mean(oh.sum(axis=2), axis=(0, 1))                # (E,)
+    aux = E * jnp.sum(me * fe)
+
+    C = moe_capacity(cfg)
+    cdt = jnp.bfloat16 if cfg.moe_combine_dtype == "bfloat16" else jnp.float32
+    ohf = oh.reshape(G, g * k, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                       # (G, gk, E)
+    pos = (pos * ohf).sum(-1).reshape(G, g, k)                # slot per choice
+    keep = (pos < C).astype(cdt)
+    wk = vals.astype(cdt) * keep                              # (G, g, k)
+    slot_oh = jax.nn.one_hot(pos, C, dtype=cdt)               # (G, g, k, C)
+    combine = jnp.einsum("gske,gsk,gskc->gsec", oh.astype(cdt), wk, slot_oh)
+    dispatch = (combine > 0).astype(x.dtype)                  # (G, g, E, C)
+
+    ein = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, p["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", ein, p["w3"])
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out_e)
+    y = y.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + mlp_forward(p["shared"], cfg, x)
+    return y, aux

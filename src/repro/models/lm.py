@@ -1,0 +1,285 @@
+"""Decoder-only language model covering dense / moe / ssm / hybrid / vlm.
+
+One scanned layer stack (parameters stacked on a leading L axis) so the HLO
+stays compact for the 512-chip dry-run; ``jax.checkpoint`` around the layer
+body for training. Decode carries a per-layer cache pytree through the same
+scan (cache layers are scan xs/ys).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_layer(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if cfg.uses_attention:
+        if cfg.attn_kind == "mla":
+            p["attn"] = L.init_mla(ks[0], cfg, dt)
+        else:
+            p["attn"] = L.init_attn(ks[0], cfg, dt)
+    if cfg.uses_ssm:
+        p["ssm"] = S.init_ssm(ks[1], cfg, dt)
+    if cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.n_experts > 0:
+            p["ffn"] = L.init_moe(ks[2], cfg, dt)
+        else:
+            p["ffn"] = L.init_mlp(ks[2], cfg, dt)
+    if cfg.post_norms:
+        p["pn1"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.d_ff > 0:
+            p["pn2"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    kemb, klay, khead = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    p: Params = {
+        "embed": (jax.random.normal(kemb, (V, cfg.d_model)) * 0.02).astype(dt),
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(
+            jax.random.split(klay, cfg.n_layers)),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(khead, (cfg.d_model, V))
+                     * 0.02).astype(dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer body
+
+
+def _window_for_layer(cfg: ModelConfig, layer_idx) -> jnp.ndarray:
+    """Traced per-layer effective window (0 disables == full attention)."""
+    w = jnp.int32(cfg.sliding_window)
+    if cfg.sliding_window == 0:
+        return jnp.int32(0)
+    if cfg.global_every > 0:
+        is_global = (layer_idx % cfg.global_every) == (cfg.global_every - 1)
+        return jnp.where(is_global, jnp.int32(0), w)
+    return w
+
+
+def layer_forward(p: Params, cfg: ModelConfig, x, positions, layer_idx,
+                  cache=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    mix = None
+    new_cache = {}
+    if cfg.uses_attention:
+        window = _window_for_layer(cfg, layer_idx)
+        acache = None if cache is None else cache.get("attn")
+        if cfg.attn_kind == "mla":
+            a, nc = L.mla_forward(p["attn"], cfg, h, positions, window=window,
+                                  cache=acache,
+                                  absorb=acache is not None and h.shape[1] == 1)
+        else:
+            a, nc = L.attn_forward(p["attn"], cfg, h, positions,
+                                   window=window, cache=acache)
+        mix = a
+        if nc is not None:
+            new_cache["attn"] = nc
+    if cfg.uses_ssm:
+        scache = None if cache is None else cache.get("ssm")
+        s, nc = S.ssm_forward(p["ssm"], cfg, h, cache=scache)
+        mix = s if mix is None else (mix + s) * 0.5
+        if nc is not None:
+            new_cache["ssm"] = nc
+    if cfg.post_norms:
+        mix = L.rmsnorm(mix, p["pn1"], cfg.norm_eps)
+    x = x + mix
+    if cfg.d_ff > 0:
+        h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            f, aux = L.moe_forward(p["ffn"], cfg, h2)
+        else:
+            f = L.mlp_forward(p["ffn"], cfg, h2)
+        if cfg.post_norms:
+            f = L.rmsnorm(f, p["pn2"], cfg.norm_eps)
+        x = x + f
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward
+
+
+def _embed(p: Params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(p: Params, cfg: ModelConfig, x):
+    x = L.rmsnorm(x, p["ln_f"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def _scan_layers(p: Params, cfg: ModelConfig, x, positions, cache=None,
+                 remat: bool = False):
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    def body(carry, xs):
+        x, aux = carry
+        if cache is None:
+            lp, li = xs
+            lc = None
+        else:
+            lp, li, lc = xs
+        x, nc, a = layer_forward(lp, cfg, x, positions, li, cache=lc)
+        return (x, aux + a), nc
+
+    fn = jax.checkpoint(body) if remat else body
+    xs = (p["layers"], idxs) if cache is None else (p["layers"], idxs, cache)
+    (x, aux), new_cache = jax.lax.scan(fn, (x, jnp.float32(0.0)), xs)
+    return x, new_cache, aux / cfg.n_layers
+
+
+def forward(p: Params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            remat: bool = False):
+    """Training/scoring forward: logits over the whole sequence."""
+    x = _embed(p, cfg, tokens, prefix_embeds)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, _, aux = _scan_layers(p, cfg, x, positions, remat=remat)
+    return _head(p, cfg, x), aux
+
+
+def _hidden(p: Params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            remat: bool = False):
+    x = _embed(p, cfg, tokens, prefix_embeds)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, _, aux = _scan_layers(p, cfg, x, positions, remat=remat)
+    return x, aux
+
+
+def chunked_ce(head_fn, x, labels, weights, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, V) logits: scan over
+    sequence chunks, each chunk's logits rematerialized in the backward."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    n = x.shape[1] // c
+    xs = (x.reshape(B, n, c, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, c).transpose(1, 0, 2),
+          weights.reshape(B, n, c).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        num, den = carry
+        xc, lc, wc = xs
+        logits = head_fn(xc)  # (B, c, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * wc
+        return (num + nll.sum(), den + wc.sum()), None
+
+    (num, den), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    return num / jnp.maximum(den, 1.0)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch, remat: bool = True):
+    """batch: dict(tokens (B,S), labels (B,S), weights optional,
+    prefix_embeds optional). Returns (loss, metrics)."""
+    x, aux = _hidden(p, cfg, batch["tokens"], batch.get("prefix_embeds"),
+                     remat=remat)
+    labels = batch["labels"]
+    Tt = labels.shape[1]
+    x = x[:, -Tt:]  # vlm: loss only over text positions
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.ones(labels.shape, jnp.float32)
+    loss = chunked_ce(lambda xc: _head(p, cfg, xc), x, labels, w)
+    if cfg.n_experts > 0:
+        loss = loss + 0.01 * aux
+    return loss, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, ctx: int) -> Any:
+    """Per-layer cache pytree stacked on a leading L axis."""
+    dt = _dtype(cfg)
+    Lz = cfg.n_layers
+    c: dict[str, Any] = {}
+    if cfg.uses_attention:
+        sc = min(ctx, cfg.sliding_window) if cfg.bounded_kv else ctx
+        if cfg.attn_kind == "mla":
+            c["attn"] = {
+                "c": jnp.zeros((Lz, batch, sc, cfg.kv_lora_rank), dt),
+                "kr": jnp.zeros((Lz, batch, sc, cfg.qk_rope_dim), dt),
+                "pos": jnp.full((Lz, batch, sc), -1, jnp.int32),
+            }
+        else:
+            c["attn"] = {
+                "k": jnp.zeros((Lz, batch, sc, cfg.n_kv_heads, cfg.head_dim),
+                               dt),
+                "v": jnp.zeros((Lz, batch, sc, cfg.n_kv_heads, cfg.head_dim),
+                               dt),
+                "pos": jnp.full((Lz, batch, sc), -1, jnp.int32),
+            }
+    if cfg.uses_ssm:
+        P = cfg.d_inner // cfg.ssm_heads
+        c["ssm"] = {
+            "state": jnp.zeros((Lz, batch, cfg.ssm_heads, P, cfg.ssm_state),
+                               jnp.float32),
+            "conv": jnp.zeros((Lz, batch, cfg.conv_kernel - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), dt),
+        }
+    return c
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens, cache, prefix_embeds=None):
+    """Fill the cache with a prompt; returns (last_logits, cache)."""
+    x = _embed(p, cfg, tokens, prefix_embeds)
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x, new_cache, _ = _scan_layers(p, cfg, x, positions, cache=cache)
+    return _head(p, cfg, x[:, -1:]), new_cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens, pos, cache):
+    """One token per sequence. tokens: (B, 1); pos: (B,) int32 positions.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = _embed(p, cfg, tokens)
+    positions = pos[:, None]
+    x, new_cache, _ = _scan_layers(p, cfg, x, positions, cache=cache)
+    return _head(p, cfg, x), new_cache

@@ -1,0 +1,159 @@
+"""Mamba2 SSD (state-space duality) block — pure JAX, chunked scan.
+
+Port of the minimal SSD algorithm (Dao & Gu 2024) with ngroups=1:
+within-chunk quadratic 'attention' + across-chunk linear recurrence. Decode
+is the O(1) recurrent step; its "cache" is the (H, dh, N) state plus the
+depthwise-conv tail — independent of context length (this is why the
+long_500k cell runs for ssm/hybrid archs only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, di, N, Hs = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * N + Hs), d, dtype),
+        "conv": dense_init(ks[1], (cfg.conv_kernel, di + 2 * N),
+                           cfg.conv_kernel, dtype),
+        "A_log": jnp.zeros((Hs,), jnp.float32),
+        "D": jnp.ones((Hs,), jnp.float32),
+        "dt_bias": jnp.zeros((Hs,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., l) -> (..., l, l) with out[i, j] = sum_{j < t <= i} x[t],
+    -inf above the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xdt, dA, Bm, Cm, chunk: int, h0=None):
+    """Core SSD. xdt: (b, S, H, P) pre-multiplied by dt; dA: (b, S, H)
+    (= dt * A, negative); Bm, Cm: (b, S, N). Returns (y, final_state).
+
+    The large intermediates (decay matrix L, chunk states) are kept in the
+    dtype of ``xdt`` (bf16 under ssm_compute_dtype=bfloat16 — §Perf A4);
+    cumsum/exp and the final accumulation stay f32 for stability.
+    """
+    b, S, H, P = xdt.shape
+    cdt = xdt.dtype
+    N = Bm.shape[-1]
+    nc = S // chunk
+    X = xdt.reshape(b, nc, chunk, H, P)
+    A = dA.reshape(b, nc, chunk, H).transpose(0, 3, 1, 2)   # (b, H, nc, l)
+    Bc = Bm.reshape(b, nc, chunk, N)
+    Cc = Cm.reshape(b, nc, chunk, N)
+
+    A_cs = jnp.cumsum(A, axis=-1)                           # (b, H, nc, l)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(A)).astype(cdt)                      # (b,H,nc,l,l)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, L, X,
+                        preferred_element_type=jnp.float32)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs).astype(cdt)  # (b,H,nc,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, X,
+                        preferred_element_type=jnp.float32)
+
+    # 3. inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros_like(states[:, 0])
+    states = jnp.concatenate([h0.astype(states.dtype)[:, None], states],
+                             axis=1)                          # (b, nc+1, ..)
+    chunk_sum = A_cs[..., -1]                                 # (b, H, nc)
+    z = jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(z))                         # (b,H,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn",
+                            decay_chunk.astype(jnp.float32),
+                            states.astype(jnp.float32))
+    prev_states = new_states[:, :-1].astype(cdt)
+    final_state = new_states[:, -1]
+
+    # 4. state -> output
+    state_decay = jnp.exp(A_cs).astype(cdt)                   # (b,H,nc,l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states,
+                       state_decay, preferred_element_type=jnp.float32)
+
+    Y = (Y_diag + Y_off).reshape(b, S, H, P)
+    return Y, final_state
+
+
+def _causal_conv(u, w, tail=None):
+    """Depthwise causal conv. u: (B, S, D); w: (K, D); tail: (B, K-1, D)
+    prior context (decode). Returns (y, new_tail)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    new_tail = ext[:, -(K - 1):] if K > 1 else tail
+    return y, new_tail
+
+
+def ssm_forward(p, cfg: ModelConfig, x, *, cache=None):
+    """x: (B, S, d). cache: dict(state=(B,H,P,N), conv=(B,K-1,di+2N)) or
+    None. Returns (out, new_cache). With a cache and S==1 this is the O(1)
+    recurrent decode step; otherwise the chunked scan."""
+    B, S, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+
+    zxbcdt = x @ p["w_in"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, new_tail = _causal_conv(
+        conv_in, p["conv"], None if cache is None else cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+
+    if cache is not None and S == 1:
+        # recurrent step: h' = h * exp(dt A) + dt * B x ; y = C h + D x
+        h = cache["state"]
+        dA = jnp.exp(dt[:, 0] * A)                                # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32), xh[:, 0])
+        h = h * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y + p["D"][None, :, None] * xh[:, 0]
+        y = y[:, None]                                             # (B,1,H,P)
+        new_state = h
+    else:
+        cdt = (jnp.bfloat16 if cfg.ssm_compute_dtype == "bfloat16"
+               else jnp.float32)
+        xdt = (xh * dt[..., None]).astype(cdt)
+        dA = dt * A  # decay stays f32 (exp/cumsum stability)
+        h0 = None if cache is None else cache["state"]
+        # largest divisor of S not exceeding the configured chunk size
+        chunk = max(c for c in range(1, min(cfg.ssm_chunk, S) + 1)
+                    if S % c == 0)
+        y, new_state = _ssd_chunked(xdt, dA, Bm.astype(cdt),
+                                    Cm.astype(cdt), chunk, h0=h0)
+        y = y.astype(jnp.float32)
+        y = y + p["D"][None, None, :, None] * xh
+
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    new_cache = {"state": new_state, "conv": new_tail}
+    return out, new_cache

@@ -1,0 +1,21 @@
+"""Banded sliding-window attention == unbanded (the §Perf D1 path)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import chunked_attention
+
+
+def test_banded_equals_unbanded(rng):
+    for (S, W, qc, kc) in [(256, 48, 32, 32), (192, 64, 64, 16),
+                           (300, 100, 32, 64)]:
+        B, H, d = 2, 2, 16
+        q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+        kw = dict(causal=True, window=jnp.int32(W), softcap=0.0,
+                  scale=d ** -0.5, q_chunk=qc, kv_chunk=kc)
+        a = chunked_attention(q, k, v, pos, pos, band_window=0, **kw)
+        b = chunked_attention(q, k, v, pos, pos, band_window=W, **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)

@@ -1,0 +1,48 @@
+"""On-device partitioners match host algorithms."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device, jagged, oned, prefix
+
+
+def test_device_probe_matches_host(rng):
+    for _ in range(20):
+        n = int(rng.integers(2, 100))
+        m = int(rng.integers(1, 10))
+        a = rng.integers(1, 500, n).astype(np.int64)
+        p = np.concatenate([[0], np.cumsum(a)])
+        Ls = rng.uniform(a.max(), a.sum(), 8)
+        feas_dev = np.asarray(device.probe_device(
+            jnp.asarray(p, jnp.float32), m, jnp.asarray(Ls, jnp.float32)))
+        for L, fd in zip(Ls, feas_dev):
+            assert fd == (oned.probe(p, m, L) is not None)
+
+
+def test_device_optimal_matches_host(rng):
+    for _ in range(15):
+        n = int(rng.integers(2, 150))
+        m = int(rng.integers(1, 12))
+        a = rng.integers(1, 1000, n).astype(np.int64)
+        p = np.concatenate([[0], np.cumsum(a)])
+        host = oned.max_interval_load(p, oned.optimal_1d(p, m))
+        cuts, L = device.optimal_1d_device(jnp.asarray(p, jnp.float32), m)
+        got = oned.max_interval_load(p, np.asarray(cuts))
+        assert got <= host * (1 + 1e-4) + 1
+        c = np.asarray(cuts)
+        assert c[0] == 0 and c[-1] == n and (np.diff(c) >= 0).all()
+
+
+def test_device_jag_m_heur_matches_host(rng):
+    for _ in range(6):
+        n1, n2 = int(rng.integers(12, 48)), int(rng.integers(12, 48))
+        A = rng.integers(1, 100, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m, P = 16, 4
+        rc, counts, cc, Lmax = device.jag_m_heur_device(
+            jnp.asarray(g, jnp.float32), P=P, m=m)
+        assert int(np.asarray(counts).sum()) == m
+        host = jagged.jag_m_heur(g, m, P=P, orient="hor").max_load(g)
+        assert float(Lmax) <= host * 1.2 + 1
+        # realized cuts form valid per-stripe partitions
+        rc = np.asarray(rc)
+        assert rc[0] == 0 and rc[-1] == n1

@@ -1,0 +1,52 @@
+"""Hybrid machinery + misc coverage."""
+import numpy as np
+import pytest
+
+from repro.core import hybrid, prefix, registry
+from repro.core.types import Partition, Rect
+
+
+def test_candidate_P_values_cover_plateaus():
+    cands = hybrid.candidate_P_values(512, 16)
+    assert all(16 <= P <= 256 for P in cands)
+    assert cands == sorted(set(cands))
+    # plateau ends: ceil((m-P)/P) changes value right after each candidate
+    for P in cands[:-1]:
+        v = -(-(512 - P) // P)
+        v_next = -(-(512 - P - 1) // (P + 1))
+        assert v_next <= v
+
+
+def test_expected_li_perfect_partition():
+    A = np.full((8, 8), 5, dtype=np.int64)
+    g = prefix.prefix_sum_2d(A)
+    p1 = registry.partition("rect-uniform", g, 4)
+    # uniform matrix + uniform parts: expected LI ~ 0
+    assert hybrid.expected_li(g, p1, 16) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_subgamma_matches_direct():
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 30, (12, 15)).astype(np.int64)
+    g = prefix.prefix_sum_2d(A)
+    r = Rect(3, 9, 4, 11)
+    sg = hybrid._subgamma(g, r)
+    np.testing.assert_array_equal(
+        sg, prefix.prefix_sum_2d(A[r.r0:r.r1, r.c0:r.c1]))
+
+
+def test_registry_names_complete():
+    names = registry.names()
+    for required in ["rect-uniform", "rect-nicol", "jag-pq-heur",
+                     "jag-pq-opt", "jag-m-heur", "jag-m-heur-probe",
+                     "jag-m-alloc", "jag-m-opt", "hier-rb", "hier-relaxed",
+                     "hier-opt", "hybrid"]:
+        assert required in names, required
+
+
+def test_partition_metrics_zero_matrix():
+    A = np.zeros((4, 4), dtype=np.int64)
+    g = prefix.prefix_sum_2d(A)
+    p = registry.partition("hier-rb", g, 4)
+    assert p.is_valid()
+    assert p.load_imbalance(g) == 0.0
