@@ -1,0 +1,40 @@
+"""Host partitioner hot paths: the PR-over-PR perf gate.
+
+Times the engine-backed probe partitioners on the paper's Uniform instance
+at 512x512 for m in {100, 1000} and records the achieved bottleneck, so a
+perf or exactness regression in the shared probe/bisection engine
+(`repro.core.search`) is visible in the JSON trail.
+
+Reference points (seed, this container): jag-m-heur-probe m=1000 ~119ms,
+jag-pq-opt m=1000 (P=25,Q=40) ~547ms.  Engine-backed: ~26ms / ~160ms.
+"""
+from __future__ import annotations
+
+from repro.core import prefix, registry
+from .common import emit, timeit
+
+# (name, m, extra kwargs) — m=1000 is not square, so JAG-PQ gets an
+# explicit 25x40 grid; m-way variants take m directly.
+CASES = [
+    ("jag-m-heur-probe", 100, {}),
+    ("jag-m-heur-probe", 1000, {}),
+    ("jag-pq-opt", 100, {}),
+    ("jag-pq-opt", 1000, {"P": 25, "Q": 40}),
+    ("jag-m-heur", 1000, {}),
+    ("rect-nicol", 100, {}),
+]
+
+
+def run(quick: bool = True) -> dict:
+    n = 512
+    A = prefix.uniform_instance(n, n, delta=1.2)
+    g = prefix.prefix_sum_2d(A)
+    out = {}
+    for name, m, kw in CASES:
+        part, dt = timeit(registry.partition, name, g, m,
+                          repeats=2 if quick else 5, **kw)
+        bott = part.max_load(g)
+        out[(name, m)] = (dt, bott)
+        emit(f"partitioner.{name}.m{m}", dt, f"Lmax={bott:.0f}",
+             bottleneck=bott, m=m, n=n)
+    return out

@@ -1,7 +1,11 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON recording."""
 from __future__ import annotations
 
 import time
+
+# Every emit() lands here; ``run.py --json FILE`` dumps it machine-readably
+# so the perf trajectory is tracked PR-over-PR.
+RECORDS: list[dict] = []
 
 
 def timeit(fn, *args, repeats: int = 3, **kw):
@@ -14,5 +18,8 @@ def timeit(fn, *args, repeats: int = 3, **kw):
     return out, best
 
 
-def emit(name: str, seconds: float, derived: str) -> None:
+def emit(name: str, seconds: float, derived: str, **fields) -> None:
+    """Print one CSV row and record it (extra fields go to the JSON dump)."""
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived, **fields})

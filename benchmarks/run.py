@@ -1,28 +1,37 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``;
+# ``--json FILE`` additionally dumps machine-readable records (name,
+# us_per_call, bottleneck/derived) for PR-over-PR perf tracking.
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
 import sys
 import traceback
 
-from . import (bench_cp_balance, bench_device_partitioner, bench_kernels,
-               bench_moe_placement, bench_roofline, fig_hybrid,
-               fig_imbalance_vs_m, fig_over_time, fig_runtime, fig_slac,
-               fig_stripes)
+from . import common
 
+# (bench name, module name) — modules import lazily so a bench whose
+# dependency subsystem is absent (e.g. repro.dist) skips instead of taking
+# the whole runner down.
 BENCHES = [
-    ("fig3_imbalance_vs_m", fig_imbalance_vs_m.run),
-    ("fig4_over_time", fig_over_time.run),
-    ("fig5_stripes", fig_stripes.run),
-    ("fig9_runtime", fig_runtime.run),
-    ("fig12_slac", fig_slac.run),
-    ("fig14_16_hybrid", fig_hybrid.run),
-    ("moe_placement", bench_moe_placement.run),
-    ("cp_balance", bench_cp_balance.run),
-    ("kernels", bench_kernels.run),
-    ("device_partitioner", bench_device_partitioner.run),
-    ("roofline", bench_roofline.run),
+    ("fig3_imbalance_vs_m", "fig_imbalance_vs_m"),
+    ("fig4_over_time", "fig_over_time"),
+    ("fig5_stripes", "fig_stripes"),
+    ("fig9_runtime", "fig_runtime"),
+    ("fig12_slac", "fig_slac"),
+    ("fig14_16_hybrid", "fig_hybrid"),
+    ("bench_partitioner", "bench_partitioner"),
+    ("moe_placement", "bench_moe_placement"),
+    ("cp_balance", "bench_cp_balance"),
+    ("kernels", "bench_kernels"),
+    ("device_partitioner", "bench_device_partitioner"),
+    ("roofline", "bench_roofline"),
 ]
+
+# subsystems that may legitimately be absent from a container: benches that
+# need them skip; any other missing module is breakage and fails the bench
+OPTIONAL_SUBSYSTEMS = ("repro.dist",)
 
 
 def main() -> None:
@@ -30,18 +39,44 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="dump machine-readable records to FILE")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
-    for name, fn in BENCHES:
+    for name, modname in BENCHES:
         if args.only and args.only not in name:
             continue
         print(f"# --- {name}", flush=True)
         try:
-            fn(quick=not args.full)
+            mod = importlib.import_module(f".{modname}", __package__)
+        except ModuleNotFoundError as e:
+            missing = e.name or ""
+            if any(missing == s or missing.startswith(s + ".")
+                   for s in OPTIONAL_SUBSYSTEMS):
+                print(f"# SKIP {name}: missing dependency {missing}",
+                      flush=True)
+                continue
+            failed.append(name)  # a typo'd import is breakage, not optional
+            traceback.print_exc()
+            continue
+        except Exception:
+            # any other import-time breakage fails this bench, not the run
+            failed.append(name)
+            traceback.print_exc()
+            continue
+        try:
+            mod.run(quick=not args.full)
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        # dump whatever was collected even when a bench failed: partial
+        # perf trails beat none
+        with open(args.json, "w") as f:
+            json.dump(common.RECORDS, f, indent=1)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              flush=True)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

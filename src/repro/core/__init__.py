@@ -8,8 +8,9 @@ Quick use::
     part = registry.partition("jag-m-heur-probe", gamma, m=6400)
     print(part.load_imbalance(gamma))
 """
-from . import hier, hybrid, jagged, oned, prefix, rect, registry, types
+from . import (hier, hybrid, jagged, oned, prefix, rect, registry, search,
+               stripecache, types)
 from .types import Partition, Rect
 
 __all__ = ["hier", "hybrid", "jagged", "oned", "prefix", "rect", "registry",
-           "types", "Partition", "Rect"]
+           "search", "stripecache", "types", "Partition", "Rect"]

@@ -6,10 +6,13 @@ on a host CPU, hostile to a TPU's vector units. We restructure it:
 - ``probe_device``: the Han-et-al greedy probe as a ``lax.scan`` of
   ``searchsorted`` steps, *vectorized over a batch of candidate bottleneck
   values* (the VPU sweeps many L values at the price of one).
-- ``optimal_1d_device``: *wide bisection* — each round probes K candidates
-  spanning [lo, hi] simultaneously, shrinking the interval by (K+1)x per
-  round instead of 2x; 6 rounds at K=8 give a 5e5x reduction, below f32
-  resolution for any realistic load range.
+- ``wide_bisect_device``: the device twin of ``search.bisect_bottleneck`` —
+  each round probes K ascending candidates spanning [lo, hi] simultaneously,
+  shrinking the interval by (K+1)x per round instead of 2x; 6 rounds at K=8
+  give a 5e5x reduction, below f32 resolution for any realistic load range.
+  Both on-device wide bisections (``optimal_1d_device`` and the per-stripe
+  loop of ``jag_m_heur_device``) run through this one helper, mirroring how
+  every host bisection runs through ``repro.core.search``.
 - ``jag_m_heur_device``: the paper's JAG-M-HEUR end-to-end on device: main
   dimension by wide bisection, proportional processor counts, per-stripe
   cuts by a batched masked probe (vmapped over stripes). Only the O(m) cut
@@ -58,6 +61,32 @@ def probe_cuts_device(p: jnp.ndarray, m: int, L: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
 
 
+def wide_bisect_device(feasible, lo: jnp.ndarray, hi: jnp.ndarray, *,
+                       k: int = 8, rounds: int = 8,
+                       dtype=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Device twin of ``search.bisect_bottleneck``: K candidates per round.
+
+    ``feasible(Ls)`` maps an ascending (k,) candidate vector to a (k,) bool
+    mask (monotone).  Returns the final (lo, hi); hi converges to the
+    optimum from above, within (hi0-lo0)/(k+1)^rounds.
+    """
+    dtype = dtype or jnp.result_type(lo, hi)
+    fr = jnp.arange(1, k + 1, dtype=dtype) / (k + 1)
+
+    def round_(carry, _):
+        lo, hi = carry
+        Ls = lo + (hi - lo) * fr
+        feas = feasible(Ls)
+        # new hi: smallest feasible candidate (or old hi)
+        hi_new = jnp.min(jnp.where(feas, Ls, hi))
+        # new lo: largest infeasible candidate (or old lo)
+        lo_new = jnp.max(jnp.where(~feas, Ls, lo))
+        return (jnp.minimum(lo_new, hi_new), hi_new), None
+
+    (lo, hi), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+    return lo, hi
+
+
 @functools.partial(jax.jit, static_argnames=("m", "k", "rounds"))
 def optimal_1d_device(p: jnp.ndarray, m: int, *, k: int = 8,
                       rounds: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -72,19 +101,8 @@ def optimal_1d_device(p: jnp.ndarray, m: int, *, k: int = 8,
     el_max = jnp.max(jnp.diff(p))
     lo = jnp.maximum(total / m, el_max)  # infeasible-or-optimal
     hi = total / m + el_max              # always feasible (DirectCut bound)
-
-    def round_(carry, _):
-        lo, hi = carry
-        fr = jnp.arange(1, k + 1, dtype=p.dtype) / (k + 1)
-        Ls = lo + (hi - lo) * fr
-        feas = probe_device(p, m, Ls)
-        # new hi: smallest feasible candidate (or old hi)
-        hi_new = jnp.min(jnp.where(feas, Ls, hi))
-        # new lo: largest infeasible candidate (or old lo)
-        lo_new = jnp.max(jnp.where(~feas, Ls, lo))
-        return (jnp.minimum(lo_new, hi_new), hi_new), None
-
-    (lo, hi), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+    _, hi = wide_bisect_device(lambda Ls: probe_device(p, m, Ls), lo, hi,
+                               k=k, rounds=rounds, dtype=p.dtype)
     cuts = probe_cuts_device(p, m, hi)
     return cuts, hi
 
@@ -151,21 +169,15 @@ def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
         lo = jnp.maximum(total_s / count, el)
         hi = total_s / count + el
 
-        def round_(carry, _):
-            lo, hi = carry
-            fr = jnp.arange(1, k + 1, dtype=p.dtype) / (k + 1)
-            Ls = lo + (hi - lo) * fr
-
+        def feasible(Ls):
             def feas_one(L):
                 cuts = _probe_cuts_masked(p, m_max, count, L)
                 return _stripe_bottleneck(p, cuts) <= L
 
-            feas = jax.vmap(feas_one)(Ls)
-            hi_new = jnp.min(jnp.where(feas, Ls, hi))
-            lo_new = jnp.max(jnp.where(~feas, Ls, lo))
-            return (jnp.minimum(lo_new, hi_new), hi_new), None
+            return jax.vmap(feas_one)(Ls)
 
-        (lo_f, hi_f), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+        _, hi_f = wide_bisect_device(feasible, lo, hi, k=k, rounds=rounds,
+                                     dtype=p.dtype)
         cuts = _probe_cuts_masked(p, m_max, count, hi_f)
         return cuts, _stripe_bottleneck(p, cuts)
 

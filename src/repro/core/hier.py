@@ -11,6 +11,12 @@
 - ``hier_opt``     HIER-OPT: the exact DP over (rectangle, m). Polynomial
                    but heavy; for small instances / tests only (the paper
                    did not even run it: "expected to run in hours").
+
+Stripe prefix arrays come from a pair of :class:`StripeView` buffers (one
+per orientation) — a bisection tree touches O(m) nodes and the seed
+allocated two fresh O(n) arrays at each; the views reuse one buffer per
+orientation.  The proportional-split candidate scan is shared with 1D
+recursive bisection via ``search.split_candidates``.
 """
 from __future__ import annotations
 
@@ -18,11 +24,29 @@ import functools
 
 import numpy as np
 
-from .prefix import rect_load, stripe_col_prefix, stripe_row_prefix
+from . import search
+from .prefix import rect_load
+from .stripecache import StripeView
 from .types import Partition, Rect
 
 
-def _best_cut_relaxed(gamma: np.ndarray, r: Rect, m: int):
+def _views(gamma: np.ndarray) -> tuple[StripeView, StripeView]:
+    """(row-stripe view: prefixes over columns, col-stripe view: over rows)."""
+    return StripeView(gamma, axis=0), StripeView(gamma, axis=1)
+
+
+def _dim_prefix(views, r: Rect, dim: int) -> tuple[int, int, np.ndarray]:
+    """(lo, hi, prefix array along dim) for cutting rect r along dim.
+
+    The returned array lives in the view's shared buffer.
+    """
+    sv_row, sv_col = views
+    if dim == 0:  # cut rows: prefix over rows restricted to r's columns
+        return r.r0, r.r1, sv_col.prefix(r.c0, r.c1)
+    return r.c0, r.c1, sv_row.prefix(r.r0, r.r1)
+
+
+def _best_cut_relaxed(gamma: np.ndarray, views, r: Rect, m: int):
     """min over (dim, cut, j) of max(L1/j, L2/(m-j)); vectorized over cuts.
 
     For each candidate cut the optimal j is the proportional split
@@ -32,16 +56,9 @@ def _best_cut_relaxed(gamma: np.ndarray, r: Rect, m: int):
     total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
     best = (np.inf, 0, r.r0 + 1, 1)
     for dim in (0, 1):
-        if dim == 0:
-            lo, hi = r.r0, r.r1
-            if hi - lo < 2:
-                continue
-            p = stripe_row_prefix(gamma, r.c0, r.c1)  # over rows
-        else:
-            lo, hi = r.c0, r.c1
-            if hi - lo < 2:
-                continue
-            p = stripe_col_prefix(gamma, r.r0, r.r1)  # over cols
+        lo, hi, p = _dim_prefix(views, r, dim)
+        if hi - lo < 2:
+            continue
         cuts = np.arange(lo + 1, hi)
         l1 = (p[cuts] - p[lo]).astype(np.float64)
         l2 = float(total) - l1
@@ -64,13 +81,14 @@ def hier_relaxed(gamma: np.ndarray, m: int, variant: str = "load"
     the dimension choice like their HIER-RB counterparts.
     """
     n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    views = _views(gamma)
     rects: list[Rect] = []
 
     def rec(r: Rect, k: int, depth: int) -> None:
         if k == 1 or r.area <= 1:
             rects.append(r)
             return
-        cost, dim, cut, j = _best_cut_relaxed(gamma, r, k)
+        cost, dim, cut, j = _best_cut_relaxed(gamma, views, r, k)
         if variant == "hor":
             want = depth % 2
         elif variant == "ver":
@@ -80,7 +98,7 @@ def hier_relaxed(gamma: np.ndarray, m: int, variant: str = "load"
         else:
             want = None
         if want is not None and dim != want:
-            forced = _best_cut_dim(gamma, r, k, want)
+            forced = _best_cut_dim(gamma, views, r, k, want)
             if forced is not None:
                 cost, dim, cut, j = forced
         if not np.isfinite(cost):
@@ -97,15 +115,10 @@ def hier_relaxed(gamma: np.ndarray, m: int, variant: str = "load"
     return Partition(rects, (n1, n2))
 
 
-def _best_cut_dim(gamma: np.ndarray, r: Rect, m: int, dim: int):
+def _best_cut_dim(gamma: np.ndarray, views, r: Rect, m: int, dim: int):
     """Relaxed best (cut, j) restricted to one dimension."""
     total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
-    if dim == 0:
-        lo, hi = r.r0, r.r1
-        p = stripe_row_prefix(gamma, r.c0, r.c1)
-    else:
-        lo, hi = r.c0, r.c1
-        p = stripe_col_prefix(gamma, r.r0, r.r1)
+    lo, hi, p = _dim_prefix(views, r, dim)
     if hi - lo < 2:
         return None
     cuts = np.arange(lo + 1, hi)
@@ -128,26 +141,20 @@ def hier_rb(gamma: np.ndarray, m: int, variant: str = "load") -> Partition:
     m - m//2 processors. variant as in the paper: 'load', 'dist', 'hor',
     'ver'."""
     n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    views = _views(gamma)
     rects: list[Rect] = []
 
     def split_scores(r: Rect, k: int, dim: int):
         """Best (cost, cut, j) for halving along dim with k1=k//2 procs."""
         total = rect_load(gamma, r.r0, r.r1, r.c0, r.c1)
-        if dim == 0:
-            lo, hi = r.r0, r.r1
-            p = stripe_row_prefix(gamma, r.c0, r.c1)
-        else:
-            lo, hi = r.c0, r.c1
-            p = stripe_col_prefix(gamma, r.r0, r.r1)
+        lo, hi, p = _dim_prefix(views, r, dim)
         if hi - lo < 2:
             return None
         k1 = k // 2
         best = None
         for j in {k1, k - k1}:
             target = p[lo] + float(total) * (j / k)
-            s = int(np.searchsorted(p, target, side="left"))
-            for cand in (s - 1, s, s + 1):
-                cand = min(max(cand, lo + 1), hi - 1)
+            for cand in search.split_candidates(p, lo, hi, target):
                 l1 = float(p[cand] - p[lo])
                 cost = max(l1 / j, (float(total) - l1) / (k - j))
                 if best is None or cost < best[0]:

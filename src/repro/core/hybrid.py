@@ -57,12 +57,17 @@ def hybrid(gamma: np.ndarray, m: int, phase1: Algo, phase2: Algo,
 
     if phase2_fast is not None:
         # fast/slow: improve the hottest part with the slow algorithm until
-        # no improvement
+        # no improvement; a part already slow-optimized cannot improve again,
+        # so the loop terminates without re-running phase2 on it.
+        slowed: set[int] = set()
         while True:
             i = int(np.argmax([s[0] for s in sub]))
+            if i in slowed:
+                break
             cur, r, sg, q, _ = sub[i]
             slow = phase2(sg, q)
             v = slow.max_load(sg)
+            slowed.add(i)
             if v < cur - 1e-12:
                 sub[i] = [v, r, sg, q, slow]
             else:

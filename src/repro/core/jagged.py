@@ -4,7 +4,7 @@ P x Q-way jagged:
 - ``jag_pq_heur``       JAG-PQ-HEUR: optimal 1D on the main-dim projection,
                         then optimal 1D inside each stripe (Thm 1 bound).
 - ``jag_pq_opt``        JAG-PQ-OPT (Nicol form): exact P x Q-way jagged via
-                        bisection + a probe whose interval cost is the
+                        wide bisection + a probe whose interval cost is the
                         stripe's optimal Q-way bottleneck (monotone).
 
 m-way jagged (introduced by the paper):
@@ -18,6 +18,11 @@ m-way jagged (introduced by the paper):
 - ``jag_m_opt``         JAG-M-OPT: exact m-way jagged DP with the paper's
                         pruning (binary search on k, memoized 1D, B&B upper
                         bound from JAG-M-HEUR-PROBE).
+
+All bisections route through :mod:`repro.core.search` (wide multi-L probes)
+and stripe prefixes through :mod:`repro.core.stripecache` (cached, zero-copy
+``gamma[r1] - gamma[r0]`` buffers); bottleneck values are bit-identical to
+the seed implementations — only the probe order changed.
 """
 from __future__ import annotations
 
@@ -25,8 +30,9 @@ import functools
 
 import numpy as np
 
-from . import oned
-from .prefix import row_prefix, stripe_col_prefix, transpose_gamma
+from . import oned, search
+from .prefix import row_prefix, transpose_gamma
+from .stripecache import StripeView, stripe_matrix
 from .types import Partition, from_row_cuts_and_col_cuts
 
 # ---------------------------------------------------------------------------
@@ -63,6 +69,12 @@ def _default_pq(m: int) -> tuple[int, int]:
     return P, P
 
 
+def _stripe_matrix(gamma: np.ndarray, row_cuts) -> np.ndarray:
+    """(P, n2+1) stripe column-prefix arrays in one gather."""
+    row_cuts = np.asarray(row_cuts)
+    return stripe_matrix(gamma, row_cuts[:-1], row_cuts[1:])
+
+
 # ---------------------------------------------------------------------------
 # P x Q-way jagged
 
@@ -73,76 +85,139 @@ def jag_pq_heur(gamma: np.ndarray, m: int, P: int | None = None,
     if P is None or Q is None:
         P, Q = _default_pq(m)
     row_cuts = oned.optimal_1d(row_prefix(gamma), P)
-    col_cuts = [oned.optimal_1d(
-        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), Q)
-        for s in range(P)]
+    col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, row_cuts),
+                                     [Q] * P)
     return _build(gamma, row_cuts, col_cuts)
+
+
+class _RowProbe:
+    """Greedy row probe for JAG-PQ-OPT, vectorized over K candidate Ls.
+
+    A stripe step must find the largest row end ``e`` whose stripe packs
+    into Q column intervals of load <= L.  Two NicolPlus-style bounds pin
+    the answer into a (usually tiny) window before any packing probe runs:
+
+    - ``e_ub``: largest e with stripe load <= Q*L (necessary);
+    - ``e_lo``: largest e with stripe load <= Q*(L - Mu), Mu the largest
+      column sum at ``e_ub`` — the DirectCut bound makes this e feasible.
+
+    The window is then resolved by pooled multi-chain packing probes
+    (``search.chain_fits``): every (candidate-L, candidate-e) pair is one
+    packed row, so a probe step costs one searchsorted for the whole pool.
+    """
+
+    def __init__(self, gamma: np.ndarray, P: int, Q: int):
+        self.gamma = gamma
+        self.rp = row_prefix(gamma)
+        self.n1 = gamma.shape[0] - 1
+        self.P, self.Q = P, Q
+        self.sv = StripeView(gamma)
+
+    def feasible_many(self, Ls: np.ndarray) -> np.ndarray:
+        Ls = np.asarray(Ls)
+        K = Ls.shape[0]
+        g, rp, n1, Q = self.gamma, self.rp, self.n1, self.Q
+        b = np.zeros(K, dtype=np.int64)
+        done = np.zeros(K, dtype=bool)
+        failed = np.zeros(K, dtype=bool)
+        QL = Q * Ls
+        for _ in range(self.P):
+            act = ~(done | failed)
+            if not act.any():
+                break
+            rb = rp.take(b)
+            e_ub = rp.searchsorted(rb + QL, side="right") - 1
+            np.minimum(e_ub, n1, out=e_ub)
+            Mu = np.diff(stripe_matrix(g, b, e_ub), axis=1).max(axis=1)
+            e_lo = rp.searchsorted(rb + Q * np.maximum(Ls - Mu, 0),
+                                   side="right") - 1
+            np.minimum(e_lo, e_ub, out=e_lo)
+            np.maximum(e_lo, b, out=e_lo)
+            glo = np.where(act, e_lo, b)
+            ghi = np.where(act, e_ub + 1, b)
+            wj = np.arange(1, 9, dtype=np.int64)
+            while True:
+                wopen = act & (ghi - glo > 1)
+                if not wopen.any():
+                    break
+                wk = np.flatnonzero(wopen)
+                W = (ghi - glo)[wk]
+                es = glo[wk, None] + (W[:, None] * wj[None, :]) // 9
+                rows_k = np.repeat(wk, wj.size)
+                rows_e = es.ravel()
+                # drop the known-feasible lower edge and in-row duplicates
+                key = rows_k * np.int64(n1 + 2) + rows_e
+                _, idx = np.unique(key, return_index=True)
+                keep = idx[rows_e.take(idx) > glo.take(rows_k.take(idx))]
+                rows_k = rows_k.take(keep)
+                rows_e = rows_e.take(keep)
+                mat = stripe_matrix(g, b.take(rows_k), rows_e)
+                good = search.chain_fits(mat, Ls.take(rows_k), Q)
+                np.maximum.at(glo, rows_k[good], rows_e[good])
+                np.minimum.at(ghi, rows_k[~good], rows_e[~good])
+            e_star = glo
+            newly_failed = act & (e_star <= b)
+            failed |= newly_failed
+            adv = act & ~newly_failed
+            b = np.where(adv, e_star, b)
+            done |= adv & (b >= n1)
+        return done
+
+    def _fits(self, b: int, e: int, L) -> bool:
+        return self.sv.count(b, e, L, self.Q) <= self.Q
+
+    def _largest_e(self, b: int, L) -> int:
+        rp, n1, Q = self.rp, self.n1, self.Q
+        e_ub = int(rp.searchsorted(rp[b] + Q * L, side="right")) - 1
+        e_ub = min(e_ub, n1)
+        if e_ub <= b:
+            return b
+        Mu = np.diff(self.sv.prefix(b, e_ub)).max()
+        e_lo = int(rp.searchsorted(rp[b] + Q * max(L - Mu, 0),
+                                   side="right")) - 1
+        e_lo = min(max(e_lo, b), e_ub)
+        if self._fits(b, e_ub, L):
+            return e_ub
+        first_bad = search.bisect_index(
+            lambda e: not self._fits(b, e, L), e_lo + 1, e_ub)
+        return first_bad - 1
+
+    def cuts(self, L) -> np.ndarray | None:
+        """Row cuts realizing bottleneck L (seed ``probe_rows`` semantics)."""
+        P, n1 = self.P, self.n1
+        cuts = np.empty(P + 1, dtype=np.int64)
+        cuts[0] = 0
+        b = 0
+        for i in range(1, P + 1):
+            if self._fits(b, n1, L):
+                cuts[i:] = [b] * (P - i) + [n1]
+                return cuts
+            e = self._largest_e(b, L)
+            if e <= b:
+                return None
+            cuts[i] = e
+            b = e
+        return None
 
 
 @_with_orientation
 def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
                Q: int | None = None) -> Partition:
-    """Exact P x Q jagged: bisect L; probe greedily extends each stripe to
-    the largest row range whose optimal Q-way bottleneck is <= L (the cost
-    of a stripe is monotone non-decreasing in its row range)."""
+    """Exact P x Q jagged: wide-bisect L; the probe greedily extends each
+    stripe to the largest row range whose optimal Q-way bottleneck is <= L
+    (the cost of a stripe is monotone non-decreasing in its row range)."""
     if P is None or Q is None:
         P, Q = _default_pq(m)
-    n1 = gamma.shape[0] - 1
-    rp = row_prefix(gamma)
-
-    def stripe_cost_fits(r0: int, r1: int, L: float) -> bool:
-        p = stripe_col_prefix(gamma, r0, r1)
-        return oned.probe_count(p, L, Q) <= Q
-
-    def probe_rows(L: float) -> np.ndarray | None:
-        cuts = np.empty(P + 1, dtype=np.int64)
-        cuts[0] = 0
-        b = 0
-        for i in range(1, P + 1):
-            if stripe_cost_fits(b, n1, L):
-                cuts[i:] = [b] * (P - i) + [n1]
-                return cuts
-            # largest e with stripe [b, e) packing into Q intervals <= L
-            lo, hi = b, n1
-            while lo < hi:
-                mid = (lo + hi + 1) // 2
-                if stripe_cost_fits(b, mid, L):
-                    lo = mid
-                else:
-                    hi = mid - 1
-            if lo <= b:
-                return None
-            cuts[i] = lo
-            b = lo
-        return None
-
-    total = float(gamma[-1, -1])
-    lo = total / m
+    lo = float(gamma[-1, -1]) / m
     heur = jag_pq_heur(gamma, m, P=P, Q=Q, orient="hor")
     hi = heur.max_load(gamma)
-    best_cuts = probe_rows(hi)
-    assert best_cuts is not None
     integral = np.issubdtype(gamma.dtype, np.integer)
-    if integral:
-        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
-        while lo_i < hi_i:
-            mid = (lo_i + hi_i) // 2
-            c = probe_rows(mid)
-            if c is not None:
-                best_cuts, hi_i = c, mid
-            else:
-                lo_i = mid + 1
-    else:
-        while hi - lo > max(1e-9 * hi, 1e-12):
-            mid = 0.5 * (lo + hi)
-            c = probe_rows(mid)
-            if c is not None:
-                best_cuts, hi = c, mid
-            else:
-                lo = mid
-    col_cuts = [oned.optimal_1d(
-        stripe_col_prefix(gamma, best_cuts[s], best_cuts[s + 1]), Q)
-        for s in range(P)]
+    rprobe = _RowProbe(gamma, P, Q)
+    L = search.bisect_bottleneck(rprobe.feasible_many, lo, hi,
+                                 integral=integral, width=31)
+    best_cuts = search.realize(rprobe.cuts, L, integral=integral)
+    col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, best_cuts),
+                                     [Q] * P)
     return _build(gamma, best_cuts, col_cuts)
 
 
@@ -153,6 +228,7 @@ def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
 def _proportional_counts(stripe_loads: np.ndarray, m: int) -> list[int]:
     """Paper's allocation: ceil((m-P) * load/total), leftovers to the stripe
     maximizing load / Q_S."""
+    stripe_loads = np.asarray(stripe_loads, dtype=np.float64)
     P = len(stripe_loads)
     total = float(stripe_loads.sum())
     if total == 0:
@@ -180,17 +256,14 @@ def jag_m_heur(gamma: np.ndarray, m: int, P: int | None = None) -> Partition:
     row_cuts = oned.optimal_1d(rp, P)
     loads = (rp[row_cuts[1:]] - rp[row_cuts[:-1]]).astype(np.float64)
     counts = _proportional_counts(loads, m)
-    col_cuts = [oned.optimal_1d(
-        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), counts[s])
-        for s in range(P)]
+    col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, row_cuts), counts)
     return _build(gamma, row_cuts, col_cuts)
 
 
 def jag_m_probe_given_stripes(gamma: np.ndarray, m: int,
                               row_cuts: np.ndarray) -> Partition:
     """JAG-M-PROBE: optimal counts + cuts for fixed main-dimension stripes."""
-    ps = [stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1])
-          for s in range(len(row_cuts) - 1)]
+    ps = _stripe_matrix(gamma, row_cuts)
     _, _, cuts = oned.nicol_multi(ps, m)
     return _build(gamma, row_cuts, cuts)
 
@@ -225,35 +298,24 @@ def jag_m_alloc(gamma: np.ndarray, m: int, counts: list[int] | None = None,
     if sum(counts) != m:
         raise ValueError("counts must sum to m")
     P = len(counts)
-
-    @functools.lru_cache(maxsize=None)
-    def stripe_cost(r0: int, r1: int, q: int) -> float:
-        p = stripe_col_prefix(gamma, r0, r1)
-        return oned.max_interval_load(p, oned.optimal_1d(p, q))
+    sv = StripeView(gamma)
 
     @functools.lru_cache(maxsize=None)
     def f(s: int, r0: int) -> tuple[float, int]:
         """Best bottleneck covering rows [r0, n1) with stripes s..P-1."""
         if s == P - 1:
-            return stripe_cost(r0, n1, counts[s]), n1
-        # binary search: stripe_cost(r0, r, q) increases with r,
-        # f(s+1, r) decreases with r
-        lo, hi = r0, n1
+            return sv.cost(r0, n1, counts[s]), n1
+        # stripe_cost(r0, r, q) increases with r, f(s+1, r) decreases with
+        # r: the min of their max sits at the crossing index (+-1).
+        cr = search.bisect_index(
+            lambda r: sv.cost(r0, r, counts[s]) >= f(s + 1, r)[0], r0, n1)
         best = (np.inf, n1)
-        while lo < hi:
-            mid = (lo + hi) // 2
-            a = stripe_cost(r0, mid, counts[s])
-            bb = f(s + 1, mid)[0]
-            v = max(a, bb)
+        for r in (cr - 1, cr, cr + 1):
+            if r < r0 or r > n1:
+                continue
+            v = max(sv.cost(r0, r, counts[s]), f(s + 1, r)[0])
             if v < best[0]:
-                best = (v, mid)
-            if a >= bb:
-                hi = mid
-            else:
-                lo = mid + 1
-        v = max(stripe_cost(r0, lo, counts[s]), f(s + 1, lo)[0])
-        if v < best[0]:
-            best = (v, lo)
+                best = (v, r)
         return best
 
     # backtrack
@@ -263,10 +325,8 @@ def jag_m_alloc(gamma: np.ndarray, m: int, counts: list[int] | None = None,
         r = f(s, r)[1]
         row_cuts.append(r)
     row_cuts.append(n1)
-    col_cuts = [oned.optimal_1d(
-        stripe_col_prefix(gamma, row_cuts[s], row_cuts[s + 1]), counts[s])
-        for s in range(P)]
-    f.cache_clear(), stripe_cost.cache_clear()
+    col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, row_cuts), counts)
+    f.cache_clear()
     return _build(gamma, np.asarray(row_cuts), col_cuts)
 
 
@@ -276,21 +336,15 @@ def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
 
     L(k, q) = min over k' < k, 1 <= x <= q of
               max(L(k', q - x), opt1d(stripe[k', k), x)).
-    Pruning: (1) an upper bound from JAG-M-HEUR-PROBE kills branches early,
-    (2) per-(k', x) stripe costs are memoized, (3) x is capped by the number
-    of processors that can possibly help. Exponent is polynomial but heavy —
-    intended for small instances / benchmarking the heuristics' gap, exactly
-    like the paper (31 min at m=961 in their C++).
+    Pruning: (1) the average-load lower bound stops the x scan early,
+    (2) per-(k', k, x) stripe costs are memoized (StripeView), (3) the k'
+    scan is a binary search on the bi-monotonic crossing. Polynomial but
+    heavy — intended for small instances / benchmarking the heuristics'
+    gap, exactly like the paper (31 min at m=961 in their C++).
     """
     n1 = gamma.shape[0] - 1
     rp = row_prefix(gamma)
-    ub = jag_m_heur_probe(gamma, m, orient="hor").max_load(gamma)
-    total = float(gamma[-1, -1])
-
-    @functools.lru_cache(maxsize=None)
-    def stripe_cost(r0: int, r1: int, q: int) -> float:
-        p = stripe_col_prefix(gamma, r0, r1)
-        return oned.max_interval_load(p, oned.optimal_1d(p, q))
+    sv = StripeView(gamma)
 
     @functools.lru_cache(maxsize=None)
     def L(k: int, q: int) -> float:
@@ -307,27 +361,20 @@ def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
         for x in range(1, q + 1):
             if best <= lb * (1 + 1e-12):
                 break  # branch-and-bound: already at the lower bound
-            # lower bound on the last stripe cost with x procs: avg load /
-            # x over any suffix is at least (load of one row)/x... use 0.
             # binary search on k': L(k', q-x) increases with k',
             # stripe_cost(k', k, x) decreases with k'
-            lo, hi = 0, k - 1
-            while lo < hi:
-                mid = (lo + hi) // 2
-                if L(mid, q - x) >= stripe_cost(mid, k, x):
-                    hi = mid
-                else:
-                    lo = mid + 1
+            lo = search.bisect_index(
+                lambda mid: L(mid, q - x) >= sv.cost(mid, k, x), 0, k - 1)
             for kp in (lo - 1, lo, lo + 1):
                 if kp < 0 or kp >= k:
                     continue
-                v = max(L(kp, q - x), stripe_cost(kp, k, x))
+                v = max(L(kp, q - x), sv.cost(kp, k, x))
                 if v < best:
                     best = v
         return best
 
     # fill + backtrack
-    best_final = L(n1, m)
+    L(n1, m)
 
     def backtrack(k: int, q: int) -> list[tuple[int, int, int]]:
         """Return list of (r0, r1, x) stripes."""
@@ -336,14 +383,15 @@ def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
         target = L(k, q)
         for x in range(1, q + 1):
             for kp in range(k - 1, -1, -1):
-                v = max(L(kp, q - x), stripe_cost(kp, k, x))
+                v = max(L(kp, q - x), sv.cost(kp, k, x))
                 if v <= target + 1e-9:
                     return backtrack(kp, q - x) + [(kp, k, x)]
         raise AssertionError("backtrack failed")
 
     stripes = backtrack(n1, m)
     row_cuts = [0] + [s[1] for s in stripes]
-    col_cuts = [oned.optimal_1d(
-        stripe_col_prefix(gamma, r0, r1), x) for r0, r1, x in stripes]
-    L.cache_clear(), stripe_cost.cache_clear()
+    col_cuts = oned.optimal_1d_batch(
+        np.asarray([sv.prefix_copy(r0, r1) for r0, r1, _ in stripes]),
+        [x for _, _, x in stripes])
+    L.cache_clear()
     return _build(gamma, np.asarray(row_cuts), col_cuts)

@@ -19,20 +19,29 @@ Algorithms:
                          realizable interval sums, with Pinar-Aykanat style
                          bound tightening (the "NicolPlus" engineering).
 - ``probe_bisect_optimal`` -- exact-for-integer-loads bisection on L with
-                         ``probe`` (simple and fast; used as the default
-                         ``optimal_1d`` since our load matrices are integral).
+                         ``probe``, driven by the shared wide-bisection
+                         engine in :mod:`repro.core.search`.
+- ``optimal_1d_batch`` -- many independent (prefix array, m) problems solved
+                         in lockstep through one packed multi-chain probe.
 - ``probe_multi`` / ``nicol_multi`` -- PROBE-M and the multi-array optimal
                          partitioner (paper Section 3.2.2), the engine of
                          JAG-M-PROBE.
+
+The bisection-on-L loops that used to live here are gone; feasibility
+verdicts and realized cuts are unchanged (``search`` is exact), so all
+bottlenecks are bit-identical to the seed implementations.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from . import search
+
 __all__ = [
     "direct_cut", "recursive_bisection", "dp_optimal", "probe",
     "probe_count", "nicol_optimal", "probe_bisect_optimal", "optimal_1d",
-    "probe_multi", "nicol_multi", "cuts_to_intervals", "max_interval_load",
+    "optimal_1d_batch", "probe_multi", "nicol_multi", "cuts_to_intervals",
+    "max_interval_load",
 ]
 
 
@@ -85,8 +94,7 @@ def recursive_bisection(p: np.ndarray, m: int) -> np.ndarray:
         best = None
         for mm1, mm2 in {(m1, m2), (m2, m1)}:
             target = p[b] + (p[e] - p[b]) * (mm1 / k)
-            s = int(np.searchsorted(p, target, side="left"))
-            for cand in (s - 1, s, s + 1):
+            for cand in search.split_candidates(p, b - 1, e + 1, target):
                 cand = min(max(cand, b), e)
                 cost = max((p[cand] - p[b]) / mm1, (p[e] - p[cand]) / mm2)
                 if best is None or cost < best[0]:
@@ -117,15 +125,10 @@ def dp_optimal(p: np.ndarray, m: int) -> np.ndarray:
         g = np.empty(n, dtype=np.float64)
         ka = np.empty(n, dtype=np.int64)
         for i in range(1, n + 1):
-            lo, hi = 0, i - 1
-            # find smallest k where f[k-1 -> index k-1] >= p[i] - p[k]
-            while lo < hi:
-                mid = (lo + hi) // 2
-                fmid = f[mid - 1] if mid > 0 else 0.0
-                if fmid >= p[i] - p[mid]:
-                    hi = mid
-                else:
-                    lo = mid + 1
+            # smallest k where f[k-1] >= p[i] - p[k] (bi-monotonic crossing)
+            lo = search.bisect_index(
+                lambda k: (f[k - 1] if k > 0 else 0.0) >= p[i] - p[k],
+                0, i - 1)
             best, bk = np.inf, lo
             for k in (lo - 1, lo):
                 if k < 0 or k > i:
@@ -197,10 +200,11 @@ def _lower_bound(p: np.ndarray, m: int) -> float:
 
 
 def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
-    """Exact optimal for integer loads: bisect L in [LB, UB] with ``probe``.
+    """Exact optimal for integer loads: wide bisection on L with ``probe``.
 
-    UB is the DirectCut bound sum/m + max (Section 2.2). ~log2(max) probes.
-    For float inputs this converges to within 1e-9 relative (documented).
+    UB is the DirectCut bound sum/m + max (Section 2.2); the multi-L engine
+    resolves ~log_{K+1} rounds instead of log_2.  For float inputs this
+    converges to within 1e-9 relative (documented).
     """
     n = len(p) - 1
     if n == 0:
@@ -208,26 +212,57 @@ def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
     integral = np.issubdtype(p.dtype, np.integer)
     lo = _lower_bound(p, m)
     hi = float(p[n]) / m + float((p[1:] - p[:-1]).max(initial=0))
-    best = probe(p, m, hi)
-    assert best is not None
-    if integral:
-        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
-        while lo_i < hi_i:
-            mid = (lo_i + hi_i) // 2
-            c = probe(p, m, mid)
-            if c is not None:
-                best, hi_i = c, mid
-            else:
-                lo_i = mid + 1
-        return best
-    while hi - lo > max(1e-9 * hi, 1e-12):
-        mid = 0.5 * (lo + hi)
-        c = probe(p, m, mid)
-        if c is not None:
-            best, hi = c, mid
-        else:
-            lo = mid
-    return best
+    if n * m <= 2048:
+        # tiny problems (the jag-m DPs' stripe costs): scalar probes beat
+        # packed chains; same halving midpoints as the seed loop.
+        L = search.bisect_bottleneck_scalar(
+            lambda Lc: probe(p, m, Lc) is not None,
+            lo, hi, integral=integral)
+    else:
+        packed = search.PackedPrefixes(p[None, :])
+        L = search.bisect_bottleneck(
+            lambda Ls: packed.counts(Ls, m)[0] <= m, lo, hi,
+            integral=integral)
+    return search.realize(lambda Lc: probe(p, m, Lc), L, integral=integral)
+
+
+def optimal_1d_batch(ps, ms) -> list[np.ndarray]:
+    """Many independent optimal-1D problems solved through one packed probe.
+
+    ``ps``: list of prefix arrays (or an ``(S, n+1)`` matrix), ``ms``: the
+    per-array interval counts.  Equivalent to
+    ``[probe_bisect_optimal(p, m) for p, m in zip(ps, ms)]`` but every
+    (array, candidate-L) greedy chain advances under a single searchsorted
+    per probe step — this is the JAG-M realization hot path.
+    """
+    plist = list(ps)
+    ms = [int(m) for m in ms]
+    if not plist:
+        return []
+    los = np.empty(len(plist))
+    his = np.empty(len(plist))
+    caps = np.array(ms, dtype=np.int64)[:, None]
+    for s, (p, m) in enumerate(zip(plist, ms)):
+        n = len(p) - 1
+        maxel = float((p[1:] - p[:-1]).max(initial=0)) if n else 0.0
+        total = float(p[n]) if n else 0.0
+        los[s] = max(total / m, maxel)
+        his[s] = total / m + maxel
+    integral = all(np.issubdtype(p.dtype, np.integer) for p in plist)
+    arr = np.asarray(plist) if len({len(p) for p in plist}) == 1 else plist
+    packed = search.PackedPrefixes(arr)
+    Lstars = search.bisect_bottleneck_batch(
+        lambda Ls, rows: packed.counts(Ls, caps[rows], rows=rows)
+        <= caps[rows],
+        los, his, integral=integral)
+    out = []
+    for p, m, L in zip(plist, ms, Lstars):
+        if len(p) - 1 == 0:
+            out.append(np.zeros(m + 1, dtype=np.int64))
+            continue
+        out.append(search.realize(lambda Lc: probe(p, m, Lc), L,
+                                  integral=integral))
+    return out
 
 
 def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
@@ -254,13 +289,9 @@ def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
         suffix_avg = float(p[n] - p[b]) / k
         lo = int(np.searchsorted(p, p[b] + suffix_avg, side="left"))
         lo = max(lo, b + 1)
-        hi = n
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if probe_count(p, float(p[mid] - p[b]), k, start=b) <= k:
-                hi = mid
-            else:
-                lo = mid + 1
+        lo = search.bisect_index(
+            lambda mid: probe_count(p, float(p[mid] - p[b]), k, start=b) <= k,
+            lo, n)
         cand = max(committed, float(p[lo] - p[b]))
         if cand < best_L:
             best_L = cand
@@ -270,14 +301,8 @@ def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
         b = nb
     best_L = min(best_L, max(committed, float(p[n] - p[b])))
     # float rounding in searchsorted(p[b] + L) can make the exact optimum
-    # infeasible by an ulp; bump epsilon-wise until the probe realizes it.
-    L = best_L
-    for _ in range(60):
-        cuts = probe(p, m, L)
-        if cuts is not None:
-            return cuts
-        L = np.nextafter(L, np.inf) + 1e-12 * max(abs(L), 1.0)
-    raise AssertionError("nicol_optimal: probe failed to realize optimum")
+    # infeasible by an ulp; search.realize bumps L until the probe lands.
+    return search.realize(lambda Lc: probe(p, m, Lc), best_L, integral=False)
 
 
 def optimal_1d(p: np.ndarray, m: int) -> np.ndarray:
@@ -308,7 +333,7 @@ def probe_multi(ps: list[np.ndarray], m: int, L: float) -> list[int] | None:
 
 def nicol_multi(ps: list[np.ndarray], m: int
                 ) -> tuple[float, list[int], list[np.ndarray]]:
-    """Optimal multi-array partition: bisection on L with PROBE-M.
+    """Optimal multi-array partition: wide bisection on L with PROBE-M.
 
     Returns (bottleneck, per-array processor counts summing to <= m,
     per-array cut arrays). Exact for integer loads; 1e-9-relative for float.
@@ -329,26 +354,13 @@ def nicol_multi(ps: list[np.ndarray], m: int
     lo = max(total / m, maxels.max(initial=0.0))
     hi = float(totals.max(initial=0.0))  # one interval per array: feasible
     integral = all(np.issubdtype(p.dtype, np.integer) for p in ps)
-    best_counts = probe_multi(ps, m, hi)
-    best_L = hi
-    assert best_counts is not None
-    if integral:
-        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
-        while lo_i < hi_i:
-            mid = (lo_i + hi_i) // 2
-            c = probe_multi(ps, m, mid)
-            if c is not None:
-                best_counts, best_L, hi_i = c, float(mid), mid
-            else:
-                lo_i = mid + 1
-    else:
-        while hi - lo > max(1e-9 * hi, 1e-12):
-            mid = 0.5 * (lo + hi)
-            c = probe_multi(ps, m, mid)
-            if c is not None:
-                best_counts, best_L, hi = c, mid, mid
-            else:
-                lo = mid
+    arr = np.asarray(ps) if len({len(p) for p in ps}) == 1 else ps
+    packed = search.PackedPrefixes(arr)
+    best_L = search.bisect_bottleneck(
+        lambda Ls: packed.counts(Ls, m).sum(axis=0) <= m,
+        lo, hi, integral=integral)
+    best_counts = search.realize(lambda Lc: probe_multi(ps, m, Lc), best_L,
+                                 integral=integral)
     # distribute leftover processors greedily by load-per-processor
     counts = list(best_counts)
     left = m - sum(counts)
@@ -356,6 +368,6 @@ def nicol_multi(ps: list[np.ndarray], m: int
         s = int(np.argmax(totals / np.array(counts, dtype=np.float64)))
         counts[s] += 1
     # realize each array's cuts optimally with its processor count
-    cuts = [optimal_1d(p, c) for p, c in zip(ps, counts)]
+    cuts = optimal_1d_batch(ps, counts)
     bott = max(max_interval_load(p, c) for p, c in zip(ps, cuts))
     return bott, counts, cuts

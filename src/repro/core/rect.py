@@ -4,13 +4,16 @@
 - RECT-NICOL:   Nicol's iterative refinement — alternately fix one
   dimension's cuts and compute the optimal cuts of the other, where the
   "load" of a column interval is the max over row stripes (and vice versa).
-  Interval loads are monotone by inclusion, so the probe machinery applies.
+  Interval loads are monotone by inclusion, so the probe machinery applies;
+  the inner optimum runs on the shared wide-bisection engine with the
+  packed "max across stripes" probe (``PackedPrefixes.joint_counts``).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from . import oned
+from . import search
+from .stripecache import stripe_matrix
 from .types import Partition, from_grid
 
 
@@ -29,11 +32,10 @@ def rect_uniform(gamma: np.ndarray, m: int, P: int | None = None,
 def _stripe_prefixes(gamma: np.ndarray, cuts: np.ndarray,
                      axis: int) -> np.ndarray:
     """(P, n+1) prefix arrays of each stripe along the *other* axis."""
+    cuts = np.asarray(cuts)
     if axis == 0:  # stripes are row intervals; arrays run over columns
-        return np.stack([gamma[cuts[s + 1], :] - gamma[cuts[s], :]
-                         for s in range(len(cuts) - 1)])
-    return np.stack([gamma[:, cuts[s + 1]] - gamma[:, cuts[s]]
-                     for s in range(len(cuts) - 1)])
+        return stripe_matrix(gamma, cuts[:-1], cuts[1:])
+    return stripe_matrix(gamma.T, cuts[:-1], cuts[1:])
 
 
 def _probe_max(ps: np.ndarray, k: int, L: float) -> np.ndarray | None:
@@ -41,7 +43,8 @@ def _probe_max(ps: np.ndarray, k: int, L: float) -> np.ndarray | None:
 
     ps: (P, n+1) stripe prefix arrays. Feasible cut e from b is the largest
     e such that every stripe's interval load <= L, i.e. the min over stripes
-    of each stripe's own largest feasible e.
+    of each stripe's own largest feasible e.  (Kept as the scalar cut
+    realizer; feasibility during bisection runs through the packed probe.)
     """
     P, n1 = ps.shape
     n = n1 - 1
@@ -73,26 +76,12 @@ def _optimal_cuts_given_fixed(gamma: np.ndarray, fixed_cuts: np.ndarray,
     el = float((ps[:, 1:] - ps[:, :-1]).max(initial=0))
     lo, hi = max(total_max / k, el), total_max
     integral = np.issubdtype(ps.dtype, np.integer)
-    best = _probe_max(ps, k, hi)
-    assert best is not None
-    if integral:
-        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
-        while lo_i < hi_i:
-            mid = (lo_i + hi_i) // 2
-            c = _probe_max(ps, k, mid)
-            if c is not None:
-                best, hi_i = c, mid
-            else:
-                lo_i = mid + 1
-    else:
-        while hi - lo > max(1e-9 * hi, 1e-12):
-            mid = 0.5 * (lo + hi)
-            c = _probe_max(ps, k, mid)
-            if c is not None:
-                best, hi = c, mid
-            else:
-                lo = mid
-    return best
+    packed = search.PackedPrefixes(ps)
+    L = search.bisect_bottleneck(
+        lambda Ls: packed.joint_counts(Ls, k) <= k, lo, hi,
+        integral=integral)
+    return search.realize(lambda Lc: _probe_max(ps, k, Lc), L,
+                          integral=integral)
 
 
 def rect_nicol(gamma: np.ndarray, m: int, P: int | None = None,

@@ -1,0 +1,358 @@
+"""Unified probe/bisection engine (host-side twin of ``device.py``).
+
+Every exact partitioner in this package bottoms out in the same primitive:
+*bisect the bottleneck value L, greedily probe feasibility*.  The seed code
+carried six copy-pasted bisection loops; they now all route through this
+module, which makes two structural changes that matter on the host hot path:
+
+1. **Wide (multi-L) bisection** — ``bisect_bottleneck`` hands its feasibility
+   callback a whole *ascending vector* of K candidate bottlenecks per round
+   instead of a single midpoint.  The interval shrinks by ~(K+1)x per round,
+   so the ``log2(range)`` sequential probe rounds collapse to
+   ``ceil(log(range) / log(K+1))`` — the same trick ``optimal_1d_device``
+   plays on the VPU, here amortizing numpy dispatch overhead instead of
+   kernel launches.
+
+2. **Packed multi-chain probes** — ``PackedPrefixes`` concatenates many
+   non-decreasing prefix arrays (stripes) into one globally sorted flat
+   array, so a *single* ``searchsorted`` advances every (array, candidate-L)
+   greedy chain simultaneously.  One probe step costs one numpy call whether
+   it advances 1 chain or 500.
+
+Both engines are exact: for integer loads the integer bisection terminates
+at the true optimum; only the *order* in which candidate L values are probed
+changes, never the verdicts, so rewired callers return bit-identical
+bottlenecks (regression-tested against the seed implementations).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "PackedPrefixes", "bisect_bottleneck", "bisect_bottleneck_batch",
+    "bisect_bottleneck_scalar", "bisect_index", "chain_fits", "realize",
+    "split_candidates",
+]
+
+
+# ---------------------------------------------------------------------------
+# Packed multi-chain greedy probes
+
+
+class PackedPrefixes:
+    """S non-decreasing prefix arrays packed into one sorted flat array.
+
+    Row ``s`` is shifted by a running offset so the concatenation stays
+    globally non-decreasing; a single ``flat.searchsorted`` then answers
+    "furthest index with p[e] <= p[pos] + L" for every (row, candidate)
+    pair at once.  Queries that spill past a row's end are clipped back, so
+    zero-gap offsets are safe.
+
+    Accepts a list of 1D arrays (possibly ragged) or a 2D ``(S, n+1)``
+    matrix of equal-length rows.  Loads are assumed non-negative (prefix
+    arrays are non-decreasing); integer rows stay integer (exact).
+
+    Float caveat: the row shifts make packed comparisons
+    ``(p[pos]+shift)+L >= p[e]+shift``, which can differ from the scalar
+    probe's ``p[pos]+L >= p[e]`` by an ulp when L equals an exact prefix
+    difference.  The bisection tolerance keeps realized L values away from
+    that sliver; cut realizers must still go through :func:`realize`, which
+    nudges L upward by ulps if the scalar probe disagrees at the boundary
+    (the same guard ``nicol_optimal`` has always carried).
+    """
+
+    def __init__(self, ps):
+        if isinstance(ps, np.ndarray) and ps.ndim == 2:
+            rows, widths = ps, np.full(ps.shape[0], ps.shape[1], np.int64)
+            firsts, lasts = ps[:, 0], ps[:, -1]
+        else:
+            rows = [np.asarray(p) for p in ps]
+            widths = np.array([p.size for p in rows], dtype=np.int64)
+            firsts = np.array([p[0] for p in rows])
+            lasts = np.array([p[-1] for p in rows])
+        self.starts = np.concatenate([[0], np.cumsum(widths)[:-1]])
+        self.ends = self.starts + widths - 1  # flat index of each row's last
+        self.n = widths - 1                   # per-row element count
+        # zero-gap shifts: row s starts exactly where row s-1 ended
+        shifts = np.concatenate([[0], np.cumsum(lasts[:-1] - firsts[1:])])
+        if isinstance(rows, np.ndarray):
+            self.flat = (rows + shifts[:, None]).ravel()
+        else:
+            self.flat = np.concatenate(
+                [p + sh for p, sh in zip(rows, shifts)])
+
+    def counts(self, Ls, cap, rows=None):
+        """Greedy interval counts per (row, candidate), capped.
+
+        Ls: ``(K,)`` candidates shared by all rows, or ``(S, K)`` per-row.
+        cap: scalar or ``(S, 1)`` per-row cap.  ``rows`` restricts the probe
+        to a subset of packed rows (then S is ``rows.size`` and Ls/cap are
+        indexed by subset position).  Returns ``(S, K)`` int64 counts with
+        the sentinel ``cap + 1`` for chains that exceed the cap or get
+        stuck (a single element > L); empty rows count 1, mirroring
+        ``oned.probe_count``.
+        """
+        Ls = np.atleast_2d(np.asarray(Ls))
+        starts = self.starts if rows is None else self.starts[rows]
+        row_ends = self.ends if rows is None else self.ends[rows]
+        nmax = self.n if rows is None else self.n[rows]
+        S = starts.shape[0]
+        K = Ls.shape[-1]
+        flat, ends = self.flat, row_ends[:, None]
+        fpos = np.broadcast_to(starts[:, None], (S, K)).copy()
+        counts = np.zeros((S, K), dtype=np.int64)
+        capa = np.asarray(cap)
+        cap_bc = capa if capa.ndim else capa[()]
+        for _ in range(int(nmax.max(initial=0))):
+            t = flat.take(fpos)
+            t = t + Ls
+            raw = flat.searchsorted(t, side="right")
+            raw -= 1
+            np.minimum(raw, ends, out=raw)
+            moved = (raw > fpos) & (counts <= cap_bc)
+            if not moved.any():
+                break
+            np.add(counts, moved, out=counts, casting="unsafe")
+            fpos = np.where(moved, raw, fpos)
+        # chains that froze mid-row (stuck or over cap) are infeasible
+        unfinished = fpos < ends
+        if unfinished.any():
+            if capa.ndim:
+                sentinel = np.broadcast_to(capa + 1, (S, K))
+                counts[unfinished] = sentinel[unfinished]
+            else:
+                counts[unfinished] = int(capa) + 1
+        np.maximum(counts, 1, out=counts)
+        return counts
+
+    def joint_counts(self, Ls, cap):
+        """Counts for the 'max across rows' load structure (rect-nicol).
+
+        All rows share one index axis; a step advances to the largest e such
+        that *every* row's interval load is <= L (the min over rows of each
+        row's own furthest e).  Rows must be equal length.  Returns ``(K,)``
+        counts with sentinel ``cap + 1``.
+        """
+        Ls = np.asarray(Ls)
+        K = Ls.shape[-1]
+        n = int(self.n[0])
+        flat, starts = self.flat, self.starts[:, None]
+        pos = np.zeros(K, dtype=np.int64)
+        counts = np.zeros(K, dtype=np.int64)
+        for _ in range(min(int(cap) + 1, n) if n else 0):
+            t = flat.take(starts + pos[None, :])
+            t = t + Ls[None, :]
+            raw = flat.searchsorted(t, side="right")
+            raw -= 1
+            raw -= starts
+            np.minimum(raw, n, out=raw)
+            e = raw.min(axis=0)
+            moved = (e > pos) & (counts <= cap)
+            if not moved.any():
+                break
+            np.add(counts, moved, out=counts, casting="unsafe")
+            pos = np.where(moved, e, pos)
+        counts[pos < n] = int(cap) + 1
+        np.maximum(counts, 1, out=counts)
+        return counts
+
+
+def chain_fits(rows: np.ndarray, Ls: np.ndarray, cap: int) -> np.ndarray:
+    """True per row iff the row packs into <= cap intervals of load <= L.
+
+    rows: ``(R, n+1)`` stripe prefix matrix, Ls: ``(R,)`` per-row bottleneck.
+    One packed greedy serves every row; used by the jagged row probes where
+    each pooled row is a different (stripe, candidate-L) pair.
+    """
+    packed = PackedPrefixes(rows)
+    return packed.counts(np.asarray(Ls)[:, None], cap)[:, 0] <= cap
+
+
+# ---------------------------------------------------------------------------
+# Wide bisection drivers
+
+
+def bisect_bottleneck(feasible, lo, hi, *, integral: bool, width: int = 15,
+                      rel_tol: float = 1e-9, abs_tol: float = 1e-12):
+    """Smallest feasible bottleneck in [lo, hi] by wide bisection.
+
+    ``feasible(Ls)`` receives an *ascending* 1D array of candidate L values
+    and returns a boolean mask (monotone: once True, always True).  ``hi``
+    must be feasible.  Integral mode is exact and returns a Python ``int``
+    — unless the interval was already closed, in which case the original
+    (possibly float) ``hi`` is returned so callers realize cuts at exactly
+    the value the seed implementations probed.
+    """
+    if integral:
+        lo_i = int(np.ceil(lo - 1e-9))
+        hi_i = int(np.floor(hi))
+        lowered = False
+        while lo_i < hi_i:
+            span = hi_i - lo_i
+            k = min(width, span)
+            j = np.arange(1, k + 1, dtype=np.int64)
+            cand = np.unique(lo_i + (span * j) // (k + 1))
+            feas = np.asarray(feasible(cand))
+            f = np.flatnonzero(feas)
+            nf = np.flatnonzero(~feas)
+            if f.size:
+                hi_i = int(cand[f[0]])
+                lowered = True
+            if nf.size:
+                lo_i = int(cand[nf[-1]]) + 1
+        return hi_i if lowered else hi
+    lo, hi = float(lo), float(hi)
+    while hi - lo > max(rel_tol * abs(hi), abs_tol):
+        fr = np.arange(1, width + 1, dtype=np.float64) / (width + 1)
+        cand = lo + (hi - lo) * fr
+        feas = np.asarray(feasible(cand))
+        f = np.flatnonzero(feas)
+        nf = np.flatnonzero(~feas)
+        if f.size:
+            hi = float(cand[f[0]])
+        if nf.size:
+            lo = float(cand[nf[-1]])
+    return hi
+
+
+def bisect_bottleneck_batch(feasible, lo, hi, *, integral: bool,
+                            width: int = 15, rel_tol: float = 1e-9,
+                            abs_tol: float = 1e-12) -> list:
+    """Per-row wide bisection: S independent (lo, hi) intervals in lockstep.
+
+    ``feasible(Ls, rows)`` receives an ``(A, K)`` candidate matrix (row-wise
+    ascending) for the still-active row indices ``rows`` and returns an
+    ``(A, K)`` boolean mask — converged rows are compacted out of later
+    rounds so one slow stripe doesn't keep re-probing the rest.  Returns a
+    list of S realize-values with the same exactness contract as
+    :func:`bisect_bottleneck`.
+    """
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    S = lo.shape[0]
+    j = np.arange(1, width + 1, dtype=np.int64)
+    if integral:
+        lob = np.ceil(lo - 1e-9).astype(np.int64)
+        hib = np.floor(hi).astype(np.int64)
+        np.maximum(hib, lob, out=hib)
+        lowered = np.zeros(S, dtype=bool)
+        while True:
+            rows = np.flatnonzero(lob < hib)
+            if not rows.size:
+                break
+            la, ha = lob[rows], hib[rows]
+            cand = la[:, None] + ((ha - la)[:, None] * j[None, :]) \
+                // (width + 1)
+            feas = np.asarray(feasible(cand, rows))
+            A = rows.size
+            anyf = feas.any(axis=1)
+            first = cand[np.arange(A), feas.argmax(axis=1)]
+            hib[rows] = np.where(anyf, first, ha)
+            lowered[rows] |= anyf
+            infeas = ~feas
+            anyi = infeas.any(axis=1)
+            last = cand[np.arange(A),
+                        infeas.shape[1] - 1 - infeas[:, ::-1].argmax(axis=1)]
+            lob[rows] = np.where(anyi, last + 1, la)
+        return [int(hib[s]) if lowered[s] else float(hi[s])
+                for s in range(S)]
+    lo = lo.copy()
+    hi_f = hi.copy()
+    fr = np.arange(1, width + 1, dtype=np.float64) / (width + 1)
+    while True:
+        rows = np.flatnonzero(
+            hi_f - lo > np.maximum(rel_tol * np.abs(hi_f), abs_tol))
+        if not rows.size:
+            break
+        la, ha = lo[rows], hi_f[rows]
+        cand = la[:, None] + (ha - la)[:, None] * fr[None, :]
+        feas = np.asarray(feasible(cand, rows))
+        A = rows.size
+        anyf = feas.any(axis=1)
+        first = cand[np.arange(A), feas.argmax(axis=1)]
+        hi_f[rows] = np.where(anyf, first, ha)
+        infeas = ~feas
+        anyi = infeas.any(axis=1)
+        last = cand[np.arange(A),
+                    infeas.shape[1] - 1 - infeas[:, ::-1].argmax(axis=1)]
+        lo[rows] = np.where(anyi, last, la)
+    return [float(hi_f[s]) for s in range(S)]
+
+
+def bisect_bottleneck_scalar(feasible_one, lo, hi, *, integral: bool,
+                             rel_tol: float = 1e-9, abs_tol: float = 1e-12):
+    """Plain halving twin of :func:`bisect_bottleneck` for tiny problems.
+
+    On problems a few dozen elements long the vector-candidate machinery
+    costs more than it saves; this walks the same midpoints as the K=1 wide
+    bisection (and the seed loops) with one ``feasible_one(L) -> bool``
+    call per round.  Same exactness and realize-value contract.
+    """
+    if integral:
+        a, b = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        lowered = False
+        while a < b:
+            mid = (a + b) // 2
+            if feasible_one(mid):
+                b = mid
+                lowered = True
+            else:
+                a = mid + 1
+        return b if lowered else hi
+    lo, hi = float(lo), float(hi)
+    lowered = False
+    while hi - lo > max(rel_tol * abs(hi), abs_tol):
+        mid = 0.5 * (lo + hi)
+        if feasible_one(mid):
+            hi = mid
+            lowered = True
+        else:
+            lo = mid
+    return hi
+
+
+def realize(realizer, L, *, integral: bool):
+    """Run a scalar cut realizer at the engine's L, ulp-bumping for floats.
+
+    ``realizer(L)`` returns cuts or None.  Integral bottlenecks are exact
+    so None is a genuine bug; for float inputs the packed probes' shifted
+    comparisons can disagree with the scalar probe by an ulp at boundary
+    values, so L is nudged upward until the probe realizes it.
+    """
+    out = realizer(L)
+    if out is None and not integral:
+        for _ in range(60):
+            L = np.nextafter(L, np.inf) + 1e-12 * max(abs(L), 1.0)
+            out = realizer(L)
+            if out is not None:
+                break
+    assert out is not None, "probe failed to realize engine bottleneck"
+    return out
+
+
+def bisect_index(pred, lo: int, hi: int) -> int:
+    """Smallest i in [lo, hi] with pred(i) true (pred monotone false->true).
+
+    The shared index-search twin of the L-bisection: Nicol's parametric
+    chain, the jagged DPs and the Manne-Olstad DP all binary-search a
+    crossing index of a bi-monotonic objective.
+    """
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if pred(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def split_candidates(p: np.ndarray, lo: int, hi: int, target) -> range:
+    """Indices around the proportional split point, clipped to (lo, hi).
+
+    Shared by recursive bisection (1D) and HIER-RB: the best two-way cut for
+    a load target lies at searchsorted(target) +- 1.
+    """
+    s = int(np.searchsorted(p, target, side="left"))
+    a = min(max(s - 1, lo + 1), hi - 1)
+    b = min(max(s + 1, lo + 1), hi - 1)
+    return range(a, b + 1)

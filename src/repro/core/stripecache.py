@@ -1,0 +1,70 @@
+"""Zero-copy stripe prefix views + memoized stripe costs over Gamma.
+
+The jagged DPs (`jag_pq_opt`, `jag_m_alloc`, `jag_m_opt`) and the
+hierarchical bisections evaluate thousands of stripes ``[r0, r1)`` inside
+nested binary searches; the seed re-materialized a fresh O(n2) prefix array
+(``gamma[r1] - gamma[r0]``) for every probe step.  :class:`StripeView`
+centralizes that access:
+
+- ``prefix``        writes the difference into one reused buffer — zero
+                    allocations per probe step (callers must consume the
+                    buffer before the next ``prefix`` call);
+- ``stripe_matrix`` (module-level) gathers many stripes at once into a
+                    single fresh ``(R, n+1)`` matrix — one fancy-index op,
+                    for the packed multi-chain probes;
+- ``cost``          memoizes the exact q-way bottleneck per ``(r0, r1, q)``
+                    so DP cells shared between the binary search and the
+                    backtrack are computed once.
+
+``axis=1`` serves the transposed orientation (stripes over columns) without
+copying Gamma: rows of ``gamma.T`` are strided views, and ``prefix`` lands
+them in the contiguous buffer searchsorted wants.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import oned
+
+__all__ = ["StripeView", "stripe_matrix"]
+
+
+def stripe_matrix(gamma: np.ndarray, r0s, r1s) -> np.ndarray:
+    """``(R, n+1)`` matrix of stripe prefixes ``[r0s[i], r1s[i])`` in one
+    gather — the shared bulk form of ``prefix.stripe_col_prefix`` used by
+    the packed multi-chain probes (jagged, rect)."""
+    return gamma.take(r1s, axis=0) - gamma.take(r0s, axis=0)
+
+
+class StripeView:
+    """Cached stripe-prefix access for one Gamma (and one orientation)."""
+
+    def __init__(self, gamma: np.ndarray, axis: int = 0):
+        self.gamma = gamma if axis == 0 else gamma.T
+        self._buf = np.empty(self.gamma.shape[1], dtype=gamma.dtype)
+        self._costs: dict[tuple[int, int, int], float] = {}
+
+    def prefix(self, r0: int, r1: int) -> np.ndarray:
+        """Stripe column-prefix array, written into the shared buffer.
+
+        The returned array is reused by the next call — consume it first.
+        """
+        return np.subtract(self.gamma[r1], self.gamma[r0], out=self._buf)
+
+    def prefix_copy(self, r0: int, r1: int) -> np.ndarray:
+        """Owned copy, for callers that must hold the stripe."""
+        return self.gamma[r1] - self.gamma[r0]
+
+    def count(self, r0: int, r1: int, L, cap: int) -> int:
+        """Greedy interval count of the stripe for bottleneck L (capped)."""
+        return oned.probe_count(self.prefix(r0, r1), L, cap)
+
+    def cost(self, r0: int, r1: int, q: int) -> float:
+        """Exact optimal q-way bottleneck of stripe ``[r0, r1)``, memoized."""
+        key = (r0, r1, q)
+        v = self._costs.get(key)
+        if v is None:
+            p = self.prefix_copy(r0, r1)
+            v = oned.max_interval_load(p, oned.optimal_1d(p, q))
+            self._costs[key] = v
+        return v

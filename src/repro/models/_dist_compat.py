@@ -1,0 +1,20 @@
+"""Graceful degradation when the ``repro.dist`` subsystem is absent.
+
+The model layers only use ``repro.dist.ctx`` for sharding *hints*
+(``constrain``) and mesh discovery (``current_mesh``); on a single device
+both are semantically no-ops, so models stay runnable (and testable) on
+containers that ship without the distributed subsystem.  Restoring
+``repro.dist`` swaps the real implementations back in transparently.
+"""
+from __future__ import annotations
+
+try:
+    from repro.dist.ctx import constrain, current_mesh
+except ModuleNotFoundError:
+    def constrain(x, *spec):
+        """Sharding-constraint hint; identity without repro.dist."""
+        return x
+
+    def current_mesh():
+        """Active device mesh; None (single device) without repro.dist."""
+        return None

@@ -70,7 +70,7 @@ def init_params(key, cfg: ModelConfig) -> Params:
 
 
 def _attend(p, cfg, xq, xkv, q_pos, kv_pos, causal):
-    from repro.dist.ctx import constrain
+    from repro.models._dist_compat import constrain
     q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])

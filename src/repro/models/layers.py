@@ -98,13 +98,13 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool, window,
     kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pk)), constant_values=-1)
     nq, nk = q.shape[1] // qc, k.shape[1] // kc
 
-    from repro.dist.ctx import constrain
+    from repro.models._dist_compat import constrain
     qb = q.reshape(B, nq, qc, H, dk).transpose(1, 0, 2, 3, 4)
     qpb = q_pos.reshape(B, nq, qc).transpose(1, 0, 2)
     kb = k.reshape(B, nk, kc, Hkv, dk).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(B, nk, kc, Hkv, dv).transpose(1, 0, 2, 3, 4)
     kpb = kv_pos.reshape(B, nk, kc).transpose(1, 0, 2)
-    from repro.dist.ctx import current_mesh
+    from repro.models._dist_compat import current_mesh
     mesh = current_mesh()
     tp = mesh.shape.get("model", 1) if mesh is not None else 1
     if Sq > 1:
@@ -219,7 +219,7 @@ def attn_forward(p: Params, cfg: ModelConfig, x, positions, *, window,
     cache_index: traced int32 scalar — next write slot (decode) or 0
     (prefill). Returns (out, new_cache).
     """
-    from repro.dist.ctx import constrain
+    from repro.models._dist_compat import constrain
     B, S, d = x.shape
     rep = cfg.n_heads // cfg.n_kv_heads
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -318,7 +318,7 @@ def mla_forward(p: Params, cfg: ModelConfig, x, positions, *, window,
     absorb=True uses the w_kv_b-absorbed decode path: attention runs in the
     512-dim latent space and the per-head expansion never touches the cache.
     """
-    from repro.dist.ctx import constrain
+    from repro.models._dist_compat import constrain
     B, S, d = x.shape
     H = cfg.n_heads
     nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim

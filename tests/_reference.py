@@ -1,0 +1,212 @@
+"""Verbatim copies of the seed's sequential bisection loops.
+
+The shared engine in ``repro.core.search`` replaced six copy-pasted
+halving bisections; these reference implementations preserve the originals
+so the equivalence suite can assert the rewired partitioners return
+*identical bottlenecks* on randomized instances.  The greedy realizers
+(``probe``/``probe_count``/``probe_multi``) are unchanged from the seed and
+imported directly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oned
+from repro.core.oned import probe, probe_count, probe_multi
+from repro.core.prefix import stripe_col_prefix
+
+
+def _lower_bound(p, m):
+    n = len(p) - 1
+    maxel = float((p[1:] - p[:-1]).max(initial=0))
+    return max(float(p[n]) / m, maxel)
+
+
+def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
+    """Seed halving bisection with ``probe`` (exact for integer loads)."""
+    n = len(p) - 1
+    if n == 0:
+        return np.zeros(m + 1, dtype=np.int64)
+    integral = np.issubdtype(p.dtype, np.integer)
+    lo = _lower_bound(p, m)
+    hi = float(p[n]) / m + float((p[1:] - p[:-1]).max(initial=0))
+    best = probe(p, m, hi)
+    assert best is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe(p, m, mid)
+            if c is not None:
+                best, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+        return best
+    while hi - lo > max(1e-9 * hi, 1e-12):
+        mid = 0.5 * (lo + hi)
+        c = probe(p, m, mid)
+        if c is not None:
+            best, hi = c, mid
+        else:
+            lo = mid
+    return best
+
+
+def nicol_multi(ps, m):
+    """Seed multi-array bisection (halving over PROBE-M)."""
+    totals = np.array([float(p[-1]) for p in ps])
+    maxels = np.array([float((p[1:] - p[:-1]).max(initial=0)) for p in ps])
+    total = totals.sum()
+    if total == 0:
+        counts = [1] * len(ps)
+        cuts = [np.zeros(2, dtype=np.int64) for _ in ps]
+        for p, c in zip(ps, cuts):
+            c[1] = len(p) - 1
+        return 0.0, counts, cuts
+    if m < len(ps):
+        raise ValueError(f"need m >= #arrays, got m={m} arrays={len(ps)}")
+    lo = max(total / m, maxels.max(initial=0.0))
+    hi = float(totals.max(initial=0.0))
+    integral = all(np.issubdtype(p.dtype, np.integer) for p in ps)
+    best_counts = probe_multi(ps, m, hi)
+    assert best_counts is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe_multi(ps, m, mid)
+            if c is not None:
+                best_counts, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = probe_multi(ps, m, mid)
+            if c is not None:
+                best_counts, hi = c, mid
+            else:
+                lo = mid
+    counts = list(best_counts)
+    left = m - sum(counts)
+    for _ in range(left):
+        s = int(np.argmax(totals / np.array(counts, dtype=np.float64)))
+        counts[s] += 1
+    cuts = [probe_bisect_optimal(p, c) for p, c in zip(ps, counts)]
+    bott = max(oned.max_interval_load(p, c) for p, c in zip(ps, cuts))
+    return bott, counts, cuts
+
+
+def jag_pq_opt_bottleneck(gamma: np.ndarray, m: int, P: int, Q: int,
+                          heur_hi: float) -> float:
+    """Seed JAG-PQ-OPT ('hor'): halving bisection over the greedy row probe.
+
+    Returns the achieved bottleneck (max over stripes of the stripe's
+    optimal Q-way bottleneck at the realized row cuts).
+    """
+    n1 = gamma.shape[0] - 1
+
+    def stripe_cost_fits(r0, r1, L):
+        p = stripe_col_prefix(gamma, r0, r1)
+        return probe_count(p, L, Q) <= Q
+
+    def probe_rows(L):
+        cuts = np.empty(P + 1, dtype=np.int64)
+        cuts[0] = 0
+        b = 0
+        for i in range(1, P + 1):
+            if stripe_cost_fits(b, n1, L):
+                cuts[i:] = [b] * (P - i) + [n1]
+                return cuts
+            lo, hi = b, n1
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if stripe_cost_fits(b, mid, L):
+                    lo = mid
+                else:
+                    hi = mid - 1
+            if lo <= b:
+                return None
+            cuts[i] = lo
+            b = lo
+        return None
+
+    total = float(gamma[-1, -1])
+    lo, hi = total / m, heur_hi
+    best_cuts = probe_rows(hi)
+    assert best_cuts is not None
+    integral = np.issubdtype(gamma.dtype, np.integer)
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe_rows(mid)
+            if c is not None:
+                best_cuts, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = probe_rows(mid)
+            if c is not None:
+                best_cuts, hi = c, mid
+            else:
+                lo = mid
+    bott = 0.0
+    for s in range(P):
+        p = stripe_col_prefix(gamma, best_cuts[s], best_cuts[s + 1])
+        cuts = probe_bisect_optimal(p, Q)
+        bott = max(bott, oned.max_interval_load(p, cuts))
+    return bott
+
+
+def optimal_cuts_given_fixed_max(ps: np.ndarray, k: int) -> np.ndarray:
+    """Seed rect-nicol inner optimum (halving over the max-stripes probe)."""
+
+    def probe_max(L):
+        P, n1 = ps.shape
+        n = n1 - 1
+        cuts = np.empty(k + 1, dtype=np.int64)
+        cuts[0] = 0
+        b = 0
+        for i in range(1, k + 1):
+            if ((ps[:, n] - ps[:, b]) <= L).all():
+                cuts[i:] = [b] * (k - i) + [n]
+                return cuts
+            e = n
+            for s in range(P):
+                es = int(np.searchsorted(ps[s], ps[s, b] + L,
+                                         side="right")) - 1
+                if es < e:
+                    e = es
+            if e <= b:
+                return None
+            cuts[i] = e
+            b = e
+        return None
+
+    total_max = float((ps[:, -1] - ps[:, 0]).max(initial=0))
+    el = float((ps[:, 1:] - ps[:, :-1]).max(initial=0))
+    lo, hi = max(total_max / k, el), total_max
+    integral = np.issubdtype(ps.dtype, np.integer)
+    best = probe_max(hi)
+    assert best is not None
+    if integral:
+        lo_i, hi_i = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
+        while lo_i < hi_i:
+            mid = (lo_i + hi_i) // 2
+            c = probe_max(mid)
+            if c is not None:
+                best, hi_i = c, mid
+            else:
+                lo_i = mid + 1
+    else:
+        while hi - lo > max(1e-9 * hi, 1e-12):
+            mid = 0.5 * (lo + hi)
+            c = probe_max(mid)
+            if c is not None:
+                best, hi = c, mid
+            else:
+                lo = mid
+    return best

@@ -3,7 +3,11 @@ import functools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: fixed-seed shim (tests/_hyp.py)
+    from _hyp import given, settings, strategies as st
 
 from repro.core import oned
 

@@ -1,7 +1,11 @@
 """2D partitioning: validity, class orderings, optimality, theorems."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: fixed-seed shim (tests/_hyp.py)
+    from _hyp import given, settings, strategies as st
 
 from repro.core import hier, jagged, prefix, rect, registry
 from repro.core.types import Partition, Rect

@@ -1,8 +1,13 @@
 """Serving batcher + paper-technique integration layers (MoE/CP)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: fixed-seed shim (tests/_hyp.py)
+    from _hyp import given, settings, strategies as st
+
+pytest.importorskip("repro.dist", reason="repro.dist subsystem not present")
 from repro.dist import cp_balance, moe_placement
 from repro.serve import batcher
 
