@@ -1,0 +1,93 @@
+"""Perf-trail gate: compare fresh ``run.py --json`` dumps to a baseline.
+
+  python -m benchmarks.compare NEW [NEW2 ...] BASELINE [--threshold 1.5]
+
+The last path is the committed baseline; every earlier path is a fresh
+run and records are reduced to their per-name minimum ``us_per_call``
+(best-of-K across runs cancels scheduler noise — pass the same bench run
+twice in CI).
+
+Timings are gated on *normalized* ratios: each record's new/baseline
+ratio is divided by the median ratio across all matched records, which
+cancels the overall speed difference between the baseline machine and
+the runner (a uniformly 2x-slower CI box stays green; one bench that
+regresses relative to the rest goes red).  ``--absolute`` disables the
+normalization for same-machine comparisons.  The trade-off is explicit:
+a slowdown hitting most records at once shifts the median and hides
+itself — the tier-1 equivalence tests, not wall-clock, guard that case.
+
+Bottlenecks are exact engine outputs and machine-independent, so a
+changed ``bottleneck`` for a matched record always fails — that is a
+correctness regression wearing a perf trenchcoat.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def merge_min(paths: list[str]) -> dict[str, dict]:
+    """Per-record best-of across runs (min us_per_call wins)."""
+    out: dict[str, dict] = {}
+    for path in paths:
+        for name, rec in load(path).items():
+            if name not in out \
+                    or rec["us_per_call"] < out[name]["us_per_call"]:
+                out[name] = rec
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", metavar="JSON",
+                    help="fresh run(s)..., then the committed baseline last")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail if normalized us_per_call ratio exceeds this")
+    ap.add_argument("--absolute", action="store_true",
+                    help="skip median normalization (same-machine compare)")
+    args = ap.parse_args()
+    if len(args.files) < 2:
+        ap.error("need at least one fresh run and a baseline")
+
+    new, base = merge_min(args.files[:-1]), load(args.files[-1])
+    matched = [n for n in sorted(base) if n in new]
+    ratios = {n: new[n]["us_per_call"] / max(base[n]["us_per_call"], 1e-9)
+              for n in matched}
+    norm = 1.0 if args.absolute or not matched \
+        else statistics.median(ratios.values())
+
+    failures = []
+    for name in sorted(base):
+        if name not in new:
+            print(f"~ {name}: missing from new run (retired?)")
+            continue
+        b, n = base[name], new[name]
+        rel = ratios[name] / norm
+        flag = "REGRESSION" if rel > args.threshold else "ok"
+        print(f"{'!' if rel > args.threshold else ' '} {name}: "
+              f"{b['us_per_call']:.1f} -> {n['us_per_call']:.1f} us "
+              f"({ratios[name]:.2f}x raw, {rel:.2f}x normalized) {flag}")
+        if rel > args.threshold:
+            failures.append(f"{name} {rel:.2f}x slower (normalized)")
+        if "bottleneck" in b and "bottleneck" in n \
+                and n["bottleneck"] != b["bottleneck"]:
+            failures.append(f"{name} bottleneck changed "
+                            f"{b['bottleneck']} -> {n['bottleneck']}")
+    for name in sorted(set(new) - set(base)):
+        print(f"+ {name}: new record ({new[name]['us_per_call']:.1f} us)")
+    if failures:
+        print(f"# PERF GATE FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# perf gate passed ({len(base)} baseline records, machine "
+          f"factor {norm:.2f}x, threshold {args.threshold}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,8 @@ import traceback
 
 from . import common
 
-# (bench name, module name) — modules import lazily so a bench whose
-# dependency subsystem is absent (e.g. repro.dist) skips instead of taking
-# the whole runner down.
+# (bench name, module name) — modules import lazily so one bench's
+# import-time breakage fails that bench, not the whole runner.
 BENCHES = [
     ("fig3_imbalance_vs_m", "fig_imbalance_vs_m"),
     ("fig4_over_time", "fig_over_time"),
@@ -28,11 +27,6 @@ BENCHES = [
     ("device_partitioner", "bench_device_partitioner"),
     ("roofline", "bench_roofline"),
 ]
-
-# subsystems that may legitimately be absent from a container: benches that
-# need them skip; any other missing module is breakage and fails the bench
-OPTIONAL_SUBSYSTEMS = ("repro.dist",)
-
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -50,18 +44,9 @@ def main() -> None:
         print(f"# --- {name}", flush=True)
         try:
             mod = importlib.import_module(f".{modname}", __package__)
-        except ModuleNotFoundError as e:
-            missing = e.name or ""
-            if any(missing == s or missing.startswith(s + ".")
-                   for s in OPTIONAL_SUBSYSTEMS):
-                print(f"# SKIP {name}: missing dependency {missing}",
-                      flush=True)
-                continue
-            failed.append(name)  # a typo'd import is breakage, not optional
-            traceback.print_exc()
-            continue
         except Exception:
-            # any other import-time breakage fails this bench, not the run
+            # import-time breakage (incl. a missing module — repro.dist is
+            # mandatory since PR 2) fails this bench, not the whole run
             failed.append(name)
             traceback.print_exc()
             continue

@@ -1,0 +1,22 @@
+"""Distribution subsystem: the paper's rectangles, applied to processors.
+
+The partitioner library (``repro.core``) answers "how do I cut a load
+matrix into m balanced rectangles"; this package answers "and how does
+that place real work on a device mesh":
+
+- :mod:`repro.dist.ctx` — active-mesh context and the ``constrain``
+  sharding hints the model layers emit (``repro.models._dist_compat``
+  swaps these in when the package is importable).
+- :mod:`repro.dist.sharding` — divisibility-safe ``PartitionSpec`` trees
+  for params / batches / decode caches on the production meshes.
+- :mod:`repro.dist.cp_balance` — context-parallel causal-attention block
+  plans: the optimal *contiguous* split is a 1D partitioning problem and
+  runs on the shared wide-bisection engine.
+- :mod:`repro.dist.moe_placement` — expert placement over the
+  (layer x expert) load grid via the registry's jagged partitioners.
+"""
+from __future__ import annotations
+
+from . import cp_balance, ctx, moe_placement, sharding
+
+__all__ = ["cp_balance", "ctx", "moe_placement", "sharding"]

@@ -1,0 +1,94 @@
+"""Context-parallel causal-attention block balancing (paper 1D machinery).
+
+Sequence parallelism splits a long context into ``n_blocks`` equal token
+blocks across ``R`` ranks.  Under causal attention block ``i`` attends to
+``i + 1`` KV blocks (windowed: capped at ``window_blocks``), so equal
+*counts* are maximally unequal *work* — the last rank does ~2x the
+average.  Treating the per-block costs as a 1D load array makes the best
+*contiguous* split exactly the paper's chains-on-chains problem, and it
+runs on the shared wide-bisection engine (``core.oned.optimal_1d`` ->
+``core.search``), not a private halving loop.
+
+Contiguity is the point: contiguous ranges preserve KV locality, so ring
+passes stay neighbor-to-neighbor — the paper's rectangles-as-communication
+argument in 1D.  The non-contiguous zig-zag (``interleaved_assignment``,
+pairing block ``i`` with ``2R-1-i``) reaches exact balance but scatters
+each rank's KV across the sequence; it is the upper bound the contiguous
+plans are judged against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oned
+
+__all__ = [
+    "block_costs", "contiguous_plan", "balanced_plan",
+    "interleaved_assignment", "plan_imbalance",
+]
+
+
+def block_costs(n_blocks: int, window_blocks: int = 0) -> np.ndarray:
+    """Causal attention cost per block: #KV blocks attended by block i.
+
+    Full causal: ``i + 1``.  Sliding-window attention only looks back
+    ``window_blocks`` blocks, so costs saturate there.
+    """
+    c = np.arange(1, n_blocks + 1, dtype=np.int64)
+    if window_blocks > 0:
+        np.minimum(c, window_blocks, out=c)
+    return c
+
+
+def _cost_prefix(n_blocks: int, window_blocks: int) -> np.ndarray:
+    p = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.cumsum(block_costs(n_blocks, window_blocks), out=p[1:])
+    return p
+
+
+def contiguous_plan(n_blocks: int, R: int) -> np.ndarray:
+    """Naive equal-count contiguous cuts (what sequence sharding defaults
+    to): rank r owns blocks [cuts[r], cuts[r+1])."""
+    return np.round(np.arange(R + 1) * (n_blocks / R)).astype(np.int64)
+
+
+def balanced_plan(n_blocks: int, R: int, window_blocks: int = 0
+                  ) -> np.ndarray:
+    """Optimal contiguous cuts for the causal cost profile.
+
+    Exact (integer costs) via probe-bisection on the shared engine; the
+    plan keeps each rank's KV a single contiguous span.
+    """
+    return oned.optimal_1d(_cost_prefix(n_blocks, window_blocks), R)
+
+
+def interleaved_assignment(n_blocks: int, R: int) -> np.ndarray:
+    """Zig-zag block -> rank map: within each band of 2R blocks, rank r
+    takes blocks r and 2R-1-r (the ring-attention balancing trick).
+
+    Exactly balanced for full-causal costs when ``2R`` divides
+    ``n_blocks``, at the price of non-contiguous KV.
+    """
+    pos = np.arange(n_blocks, dtype=np.int64) % (2 * R)
+    return np.where(pos < R, pos, 2 * R - 1 - pos)
+
+
+def plan_imbalance(plan: np.ndarray, n_blocks: int, R: int,
+                   window_blocks: int = 0, contiguous: bool = True) -> float:
+    """Load imbalance ``Lmax / Lavg - 1`` of a plan (0 == perfect).
+
+    ``plan`` is a cut array (length R+1) for contiguous plans, or a
+    block -> rank assignment (length n_blocks) otherwise.
+    """
+    c = block_costs(n_blocks, window_blocks)
+    if contiguous:
+        cuts = np.asarray(plan)
+        p = _cost_prefix(n_blocks, window_blocks)
+        loads = (p[cuts[1:]] - p[cuts[:-1]]).astype(np.float64)
+    else:
+        loads = np.bincount(np.asarray(plan), weights=c.astype(np.float64),
+                            minlength=R)
+    avg = float(c.sum()) / R
+    if avg == 0:
+        return 0.0
+    return float(loads.max(initial=0.0)) / avg - 1.0

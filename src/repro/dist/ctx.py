@@ -1,0 +1,116 @@
+"""Active-mesh context and sharding-hint primitives.
+
+``mesh_context(mesh)`` declares the mesh a jitted step is being traced
+for; ``constrain`` then resolves *logical* axis names against it:
+
+- ``"dp"``    -> the data-parallel axes present on the mesh (``("pod",
+                 "data")`` on the multi-pod mesh, ``("data",)`` otherwise)
+- ``"model"`` -> the tensor-parallel axis, when the mesh has one
+- ``None``    -> unsharded
+
+Hints are *divisibility-safe*: an axis whose size does not divide the
+array dimension is dropped rather than forcing GSPMD padding, and with no
+active mesh (single device, or the ``repro.dist``-less containers served
+by ``repro.models/_dist_compat.py``) ``constrain`` is the identity — the
+same layer code traces everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+DP_AXES = ("pod", "data")
+
+_state = threading.local()
+
+
+def current_mesh():
+    """The mesh declared by the innermost :func:`mesh_context`, or None."""
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Declare ``mesh`` as the active mesh for ``constrain`` resolution.
+
+    Composes with (and does not replace) jax's own ``with mesh:`` scope;
+    launchers typically enter both: ``with mesh, ctx.mesh_context(mesh):``.
+    """
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def mesh_sizes(mesh) -> dict:
+    """{axis name: size} for concrete and abstract meshes alike."""
+    return dict(mesh.shape)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes present on ``mesh``, in fixed order."""
+    names = mesh.axis_names
+    return tuple(a for a in DP_AXES if a in names)
+
+
+def axis_entry(axes: tuple[str, ...]):
+    """PartitionSpec entry for a tuple of mesh axes (unwrap singletons)."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def resolve(mesh, spec, shape=None):
+    """Logical spec entries -> a concrete ``PartitionSpec`` for ``mesh``.
+
+    ``spec`` entries are None, ``"dp"``, or a mesh axis name.  When
+    ``shape`` is given, axes whose size product does not divide the
+    corresponding dimension are dropped (divisibility safety).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    sizes = mesh_sizes(mesh)
+    entries = []
+    for d, s in enumerate(spec):
+        if s is None:
+            entries.append(None)
+            continue
+        axes = dp_axes(mesh) if s == "dp" else (
+            (s,) if s in sizes else ())
+        if shape is not None and axes:
+            k = 1
+            for a in axes:
+                k *= sizes[a]
+            if k == 0 or shape[d] % k != 0:
+                axes = ()
+        entries.append(axis_entry(axes))
+    return P(*entries)
+
+
+def constrain(x, *spec):
+    """Pin ``x`` to the resolved sharding of ``spec`` on the active mesh.
+
+    Identity when no mesh is active; the real twin of the no-op in
+    ``repro.models/_dist_compat.py``.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+
+    p = resolve(mesh, spec, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+def abstract_mesh(shape, axes):
+    """Version-portable ``AbstractMesh`` (jax >= 0.5 takes (shape, axes);
+    0.4.x takes a tuple of (name, size) pairs)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))

@@ -1,0 +1,157 @@
+"""Divisibility-safe ``PartitionSpec`` trees for params / batches / caches.
+
+The rectilinear view of the paper (Yasar et al.'s "spec" formulation):
+a sharding is a per-dimension assignment of mesh axes, and a spec is
+*valid* only if every assigned axis product divides its dimension.  These
+builders therefore never guess-and-pad: each rule proposes a preference
+order of dimensions for the tensor-parallel axis, the first divisible one
+wins, and FSDP picks the largest remaining divisible dimension — so the
+same code yields legal specs for every config in ``repro.configs.ARCHS``
+on both production meshes (2-axis ``(data, model)`` and 3-axis
+``(pod, data, model)``) and degrades to fully-replicated on meshes that
+divide nothing.
+
+Conventions (megatron-style):
+- matmul weights shard their *output* features over ``model``; output
+  projections (``wo``/``w2``/``w_out``) shard the *reduction* dim instead,
+  so the pair forms a column-parallel -> row-parallel block with a single
+  all-reduce.
+- embedding/head shard the vocab dim (always padded to ``vocab_pad_to``).
+- scanned layer stacks keep the leading layer axis unsharded (it is a
+  ``lax.scan`` carry axis, not a spatial one).
+- FSDP shards the largest remaining dimension over the data axes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from . import ctx
+
+# parameter collections stacked on a leading scan axis (never sharded)
+_STACKED_KEYS = ("layers", "enc_layers", "dec_layers")
+# output projections: shard the reduction (input) dim over 'model'
+_ROW_PARALLEL = ("wo", "w2", "w_out")
+# attention projections (..., heads, head_dim): shard the head axis
+_HEAD_PARALLEL = ("wq", "wk", "wv", "wq_b", "wkv_b")
+# token-embedding-like tables: shard the (padded) vocab dim
+_VOCAB_KEYS = ("embed", "head")
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for k in path:
+        keys.append(str(getattr(k, "key", getattr(k, "name", k))))
+    return keys
+
+
+def _divides(shape, d: int, axes, sizes) -> bool:
+    k = 1
+    for a in axes:
+        k *= sizes[a]
+    return k > 0 and shape[d] % k == 0
+
+
+def _tp_preference(name: str, cand: list[int], shape) -> list[int]:
+    """Dimension preference order for the tensor-parallel axis."""
+    if not cand:
+        return []
+    if name in _ROW_PARALLEL:
+        # reduction dim first (row-parallel), then from the back
+        return [cand[0]] + cand[:0:-1]
+    if name in _VOCAB_KEYS:
+        big = max(cand, key=lambda d: shape[d])
+        return [big] + [d for d in reversed(cand) if d != big]
+    if name in _HEAD_PARALLEL and len(cand) >= 2:
+        # head axis first (GQA KV head counts below the TP degree fall
+        # through to head_dim, then the input dim)
+        return [cand[-2], cand[-1]] + cand[-3::-1]
+    # column-parallel default: output features live in the trailing dims
+    return cand[::-1]
+
+
+def param_specs(cfg, mesh, pspec, *, fsdp: bool = True):
+    """PartitionSpec tree mirroring ``pspec`` (one P per param leaf).
+
+    ``fsdp=False`` (serving with ``serve_fsdp_params=False``) skips the
+    data-axes shard so params replicate across DP — no per-layer
+    all-gathers at inference.
+    """
+    sizes = ctx.mesh_sizes(mesh)
+    model_ax = "model" if "model" in sizes else None
+    dp = ctx.dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        stacked = any(k in _STACKED_KEYS for k in keys)
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        cand = list(range(1 if stacked and shape else 0, len(shape)))
+        if model_ax:
+            for d in _tp_preference(name, cand, shape):
+                if _divides(shape, d, (model_ax,), sizes):
+                    entries[d] = model_ax
+                    break
+        if fsdp and dp:
+            rem = sorted((d for d in cand if entries[d] is None),
+                         key=lambda d: -shape[d])
+            for d in rem:
+                if _divides(shape, d, dp, sizes):
+                    entries[d] = ctx.axis_entry(dp)
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, pspec)
+
+
+def batch_specs(cfg, mesh, batch):
+    """Batch-dim data parallelism for input trees (tokens/labels/embeds).
+
+    Leaves keep their structure; dim 0 shards over the DP axes when
+    divisible (the ``long_500k`` batch-of-1 cell stays replicated).
+    """
+    sizes = ctx.mesh_sizes(mesh)
+    dp = ctx.dp_axes(mesh)
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if dp and shape and _divides(shape, 0, dp, sizes):
+            entries[0] = ctx.axis_entry(dp)
+        return P(*entries)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_specs(cfg, mesh, cspec):
+    """Decode-cache specs: batch over DP, sequence over ``model``.
+
+    Cache leaves are layer-stacked ``(L, B, S, ...)`` (the encoder output
+    ``enc`` is the one unstacked ``(B, S, d)`` exception), so the batch
+    dim sits at index 1 and the sequence dim right after it.  Sequence
+    sharding over ``model`` matches the decode-path ``constrain`` hints
+    (the KV cache stays distributed; only the active query replicates).
+    Non-divisible dims (SSM conv tails, tiny head counts) fall back to
+    replicated per-dim.
+    """
+    sizes = ctx.mesh_sizes(mesh)
+    model_ax = "model" if "model" in sizes else None
+    dp = ctx.dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        bdim = 0 if (keys and keys[0] == "enc") else min(1, len(shape) - 1)
+        if len(shape) == 0:
+            return P()
+        if dp and _divides(shape, bdim, dp, sizes):
+            entries[bdim] = ctx.axis_entry(dp)
+        sdim = bdim + 1
+        if (model_ax and sdim < len(shape)
+                and _divides(shape, sdim, (model_ax,), sizes)):
+            entries[sdim] = model_ax
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cspec)

@@ -103,6 +103,37 @@ def test_hybrid_runs_and_is_valid():
     assert p.m == 16
 
 
+def test_registry_sweep_exact_tiling_and_true_bottleneck():
+    """Every algorithm in the registry, ~20 randomized instances: the
+    rectangles tile the matrix exactly (no overlap, full cover) and the
+    Gamma-reported loads/bottleneck equal the true rectangle sums on A."""
+    rng = np.random.default_rng(1104)
+    for case in range(20):
+        n1, n2 = int(rng.integers(2, 10)), int(rng.integers(2, 10))
+        A = rng.integers(0, 50, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(1, 10))
+        sq = int(round(np.sqrt(m)))
+        for name in registry.names():
+            if (name.startswith(("rect", "jag-pq")) and sq * sq != m):
+                continue  # square-only algorithms
+            p = registry.partition(name, g, m)
+            assert p.m == m, (name, case)
+            paint = np.zeros((n1, n2), dtype=np.int32)
+            for r in p.rects:
+                assert 0 <= r.r0 <= r.r1 <= n1, (name, case, r)
+                assert 0 <= r.c0 <= r.c1 <= n2, (name, case, r)
+                paint[r.r0:r.r1, r.c0:r.c1] += 1
+            assert (paint == 1).all(), (name, case, m, A.shape)
+            true_loads = np.array(
+                [A[r.r0:r.r1, r.c0:r.c1].sum() for r in p.rects],
+                dtype=np.int64)
+            np.testing.assert_array_equal(p.loads(g), true_loads,
+                                          err_msg=f"{name} case {case}")
+            assert p.max_load(g) == float(true_loads.max(initial=0)), \
+                (name, case)
+
+
 def test_rect_types():
     r = Rect(0, 2, 1, 3)
     assert r.area == 4

@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist", reason="repro.dist subsystem not present")
 import repro.configs as configs
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.steps import make_train_step
