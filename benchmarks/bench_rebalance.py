@@ -1,0 +1,75 @@
+"""Beyond-paper: the streaming rebalance runtime (repro.rebalance).
+
+Three records cover the subsystem's hot paths and its core claim:
+
+- ``rebalance.batch`` — one fused SAT+partition call over T frames
+  (derived: frames/sec; the ISSUE's headline metric at T=64, 256x256,
+  m=64) vs the looped per-frame device calls it replaces.
+- ``rebalance.migrate`` — owner-map diff between consecutive covers.
+- ``rebalance.policy`` — never/always/hysteresis total cost on the
+  drifting-hotspot stream; the ``bottleneck`` field encodes the cost
+  *ordering* (hysteresis strictly cheapest), so the perf gate doubles as
+  a correctness gate on the policy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rebalance import batch_device, migrate, policy, runtime, stream
+from .common import emit, timeit
+
+
+def run(quick: bool = True) -> dict:
+    T, n, m, P = 64, 256, 64, 8
+    frames = stream.drifting_hotspot(T, n, n, seed=0)
+    fj = jnp.asarray(frames)
+
+    def batch():
+        out = batch_device.plan_stream(fj, P=P, m=m)
+        out[3].block_until_ready()
+        return out
+
+    batched = batch()  # compile
+    _, dt_batch = timeit(batch, repeats=3)
+    emit(f"rebalance.batch.T{T}.n{n}.m{m}", dt_batch,
+         f"fps={T / dt_batch:.0f}")
+
+    def looped():
+        # same SAT + partition chain, dispatched frame-by-frame
+        from repro.core import device
+        from repro.kernels.sat import ops as sat_ops
+        for t in range(T):
+            g = sat_ops.gamma(fj[t].astype(jnp.float32), use_pallas=False)
+            out = device.jag_m_heur_device(g, P=P, m=m)
+        out[3].block_until_ready()
+
+    looped()  # compile
+    _, dt_loop = timeit(looped, repeats=2)
+    emit(f"rebalance.loop.T{T}.n{n}.m{m}", dt_loop,
+         f"fps={T / dt_loop:.0f};speedup={dt_loop / dt_batch:.2f}x")
+
+    plans = batch_device.unstack_plans(batched, (n, n))
+    (_, dt_mig) = timeit(migrate.migration_volume, plans[0], plans[T // 2],
+                         repeats=3)
+    emit(f"rebalance.migrate.n{n}", dt_mig,
+         f"vol_cells={migrate.migration_volume(plans[0], plans[T // 2]):.0f}")
+
+    # policy comparison at test scale (host gammas dominate at 256^2)
+    pf = stream.drifting_hotspot(32, 48, 48, seed=0)
+    pols = {"never": policy.NeverRebalance(),
+            "always": policy.AlwaysRebalance(),
+            "hyst": policy.HysteresisPolicy()}
+    kw = dict(P=4, m=16, alpha=0.25, replan_overhead=1000.0)
+    runtime.compare_policies(pf, pols, **kw)  # compile plan_stream's shape
+    res, dt_pol = timeit(runtime.compare_policies, pf, pols, repeats=1,
+                         **kw)
+    hyst, nev, alw = (res[k].total_cost for k in ("hyst", "never", "always"))
+    order_ok = hyst < nev and hyst < alw
+    emit("rebalance.policy.hotspot.T32.n48", dt_pol,
+         f"hyst={hyst:.3g};never={nev:.3g};always={alw:.3g};"
+         f"replans={res['hyst'].n_replans}",
+         bottleneck="hyst<min(never,always)" if order_ok else "ORDER-BROKEN")
+    assert order_ok
+    return {"fps_batch": T / dt_batch, "fps_loop": T / dt_loop,
+            "hyst": hyst, "never": nev, "always": alw}

@@ -21,6 +21,7 @@ BENCHES = [
     ("fig12_slac", "fig_slac"),
     ("fig14_16_hybrid", "fig_hybrid"),
     ("bench_partitioner", "bench_partitioner"),
+    ("bench_rebalance", "bench_rebalance"),
     ("moe_placement", "bench_moe_placement"),
     ("cp_balance", "bench_cp_balance"),
     ("kernels", "bench_kernels"),

@@ -8,11 +8,15 @@ on a host CPU, hostile to a TPU's vector units. We restructure it:
   values* (the VPU sweeps many L values at the price of one).
 - ``wide_bisect_device``: the device twin of ``search.bisect_bottleneck`` —
   each round probes K ascending candidates spanning [lo, hi] simultaneously,
-  shrinking the interval by (K+1)x per round instead of 2x; 6 rounds at K=8
-  give a 5e5x reduction, below f32 resolution for any realistic load range.
-  Both on-device wide bisections (``optimal_1d_device`` and the per-stripe
-  loop of ``jag_m_heur_device``) run through this one helper, mirroring how
-  every host bisection runs through ``repro.core.search``.
+  shrinking the interval by (K+1)x per round instead of 2x; the default 8
+  rounds at K=8 are a 4.3e7x reduction of the initial DirectCut gap. The
+  limiting factor is the *accumulator* dtype, not the bisection: an f32
+  prefix array loses integer exactness once loads cross 2**24, so
+  ``jag_m_heur_device`` takes a ``gamma_dtype`` (pass ``jnp.float64`` with
+  x64 enabled for large integer loads). Both on-device wide bisections
+  (``optimal_1d_device`` and the per-stripe loop of ``jag_m_heur_device``)
+  run through this one helper, mirroring how every host bisection runs
+  through ``repro.core.search``.
 - ``jag_m_heur_device``: the paper's JAG-M-HEUR end-to-end on device: main
   dimension by wide bisection, proportional processor counts, per-stripe
   cuts by a batched masked probe (vmapped over stripes). Only the O(m) cut
@@ -131,22 +135,32 @@ def _stripe_bottleneck(p, cuts):
     return jnp.max(jnp.take(p, cuts[1:]) - jnp.take(p, cuts[:-1]))
 
 
-@functools.partial(jax.jit, static_argnames=("P", "m", "k", "rounds"))
+@functools.partial(jax.jit,
+                   static_argnames=("P", "m", "k", "rounds", "gamma_dtype"))
 def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
-                      rounds: int = 8):
+                      rounds: int = 8, gamma_dtype=None):
     """JAG-M-HEUR fully on device.
 
     gamma: (n1+1, n2+1) device prefix sums (e.g. from kernels/sat).
+    gamma_dtype: floating dtype for the bisection accumulators (row and
+    stripe prefix arrays). Defaults to gamma's own dtype when floating,
+    else float32. f32 ulps exceed 1 above 2**24, so batched runs on large
+    integer loads should pass ``jnp.float64`` (requires jax x64).
     Returns (row_cuts (P+1,), counts (P,), col_cuts (P, m_max+1), Lmax)
     with m_max = m - P + 1 (a stripe can never get more than that, since
     every other stripe keeps at least one processor).
     """
+    if gamma_dtype is None:
+        gamma_dtype = gamma.dtype if jnp.issubdtype(
+            gamma.dtype, jnp.floating) else jnp.float32
+    gamma_dtype = jnp.dtype(gamma_dtype)
     n2 = gamma.shape[1] - 1
-    row_prefix = gamma[:, n2]
+    row_prefix = gamma[:, n2].astype(gamma_dtype)
     row_cuts, _ = optimal_1d_device(row_prefix, P, k=k, rounds=rounds)
 
     stripe_prefix = (jnp.take(gamma, row_cuts[1:], axis=0)
-                     - jnp.take(gamma, row_cuts[:-1], axis=0))  # (P, n2+1)
+                     - jnp.take(gamma, row_cuts[:-1], axis=0)
+                     ).astype(gamma_dtype)  # (P, n2+1)
     loads = stripe_prefix[:, n2]
     total = jnp.maximum(row_prefix[-1], 1)
 
@@ -181,6 +195,5 @@ def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
         cuts = _probe_cuts_masked(p, m_max, count, hi_f)
         return cuts, _stripe_bottleneck(p, cuts)
 
-    col_cuts, bots = jax.vmap(stripe_optimal)(
-        stripe_prefix.astype(jnp.float32), counts)
+    col_cuts, bots = jax.vmap(stripe_optimal)(stripe_prefix, counts)
     return row_cuts, counts, col_cuts, jnp.max(bots)

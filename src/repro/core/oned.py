@@ -199,12 +199,18 @@ def _lower_bound(p: np.ndarray, m: int) -> float:
     return max(float(p[n]) / m, maxel)
 
 
-def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
+def probe_bisect_optimal(p: np.ndarray, m: int, *,
+                         warm: float | None = None) -> np.ndarray:
     """Exact optimal for integer loads: wide bisection on L with ``probe``.
 
     UB is the DirectCut bound sum/m + max (Section 2.2); the multi-L engine
     resolves ~log_{K+1} rounds instead of log_2.  For float inputs this
     converges to within 1e-9 relative (documented).
+
+    ``warm`` is an optional bottleneck from a previous plan on a similar
+    instance (``serve.batcher.replan``, the rebalance runtime).  One probe
+    classifies it — feasible tightens ``hi``, infeasible raises ``lo`` — so
+    the bisection only has to resolve the *drift* since the last plan.
     """
     n = len(p) - 1
     if n == 0:
@@ -212,6 +218,11 @@ def probe_bisect_optimal(p: np.ndarray, m: int) -> np.ndarray:
     integral = np.issubdtype(p.dtype, np.integer)
     lo = _lower_bound(p, m)
     hi = float(p[n]) / m + float((p[1:] - p[:-1]).max(initial=0))
+    if warm is not None and lo < warm < hi:
+        if probe(p, m, float(warm)) is not None:
+            hi = float(warm)
+        else:
+            lo = np.floor(warm) + 1 if integral else float(warm)
     if n * m <= 2048:
         # tiny problems (the jag-m DPs' stripe costs): scalar probes beat
         # packed chains; same halving midpoints as the seed loop.
@@ -305,9 +316,10 @@ def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
     return search.realize(lambda Lc: probe(p, m, Lc), best_L, integral=False)
 
 
-def optimal_1d(p: np.ndarray, m: int) -> np.ndarray:
+def optimal_1d(p: np.ndarray, m: int, *,
+               warm: float | None = None) -> np.ndarray:
     """Default exact 1D partitioner (probe-bisection; see module docstring)."""
-    return probe_bisect_optimal(p, m)
+    return probe_bisect_optimal(p, m, warm=warm)
 
 
 # ---------------------------------------------------------------------------

@@ -21,10 +21,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import oned
+from repro.rebalance.policy import HysteresisPolicy, StepState
 
 __all__ = [
     "block_costs", "contiguous_plan", "balanced_plan",
-    "interleaved_assignment", "plan_imbalance",
+    "interleaved_assignment", "plan_imbalance", "replan_contiguous",
 ]
 
 
@@ -71,6 +72,49 @@ def interleaved_assignment(n_blocks: int, R: int) -> np.ndarray:
     """
     pos = np.arange(n_blocks, dtype=np.int64) % (2 * R)
     return np.where(pos < R, pos, 2 * R - 1 - pos)
+
+
+def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
+                      window_blocks: int = 0, *, policy=None,
+                      alpha: float = 0.0, replan_overhead: float = 0.0,
+                      last_migration_volume: float = 0.0,
+                      steps_since_replan: int = 1,
+                      step: int | None = None) -> tuple[np.ndarray, bool]:
+    """Long-context re-split driven by the rebalance hysteresis policy.
+
+    As decoding grows the context from ``prev_cuts[-1]`` to ``n_blocks``
+    blocks, the cheap move is *extension* — the last rank absorbs the new
+    blocks, no KV migrates.  Computing the candidate fresh split is cheap
+    (one warm-started 1D bisection; the extended plan's bottleneck is a
+    feasible upper bound by construction) — what costs is *adopting* it,
+    which moves KV between ranks.  So the candidate is always computed and
+    the same :class:`~repro.rebalance.policy` trigger the 2D runtime uses
+    weighs its exact bottleneck gain against the migration bill
+    (``alpha`` / ``replan_overhead``).  Returns ``(cuts, replanned)``.
+    A static context (``n_blocks == prev_cuts[-1]``) never triggers: the
+    extension *is* the previous optimum, so the gain is exactly zero.
+    """
+    prev_cuts = np.asarray(prev_cuts, dtype=np.int64)
+    R = len(prev_cuts) - 1
+    p_new = _cost_prefix(n_blocks, window_blocks)
+    ext = np.minimum(prev_cuts, n_blocks)
+    ext[-1] = n_blocks
+    max_load = oned.max_interval_load(p_new, ext)
+    cand = oned.optimal_1d(p_new, R, warm=max_load)
+    cand_load = oned.max_interval_load(p_new, cand)
+    state = StepState(step=step if step is not None else steps_since_replan,
+                      max_load=max_load,
+                      ideal=float(p_new[-1]) / R,
+                      total_load=float(p_new[-1]),
+                      achieved_at_replan=cand_load,
+                      total_at_replan=float(p_new[-1]),
+                      steps_since_replan=steps_since_replan,
+                      last_migration_volume=last_migration_volume,
+                      alpha=alpha, replan_overhead=replan_overhead)
+    policy = policy if policy is not None else HysteresisPolicy()
+    if policy.decide(state):
+        return cand, True
+    return ext, False
 
 
 def plan_imbalance(plan: np.ndarray, n_blocks: int, R: int,

@@ -1,0 +1,32 @@
+"""repro.rebalance — time-stepped dynamic rebalancing (paper Section 6).
+
+Turns the one-shot partitioners into a streaming runtime:
+
+- :mod:`.batch_device` — SAT + ``jag_m_heur_device`` vmapped over a
+  (T, n1, n2) frame batch under one jit; only O(m) cuts leave HBM.
+- :mod:`.stream` — time-evolving workload generators (drifting hotspots,
+  particle advection, AMR bursts, the paper's PIC series).
+- :mod:`.migrate` — plan diffing: migration volume / flow / churn.
+- :mod:`.policy` — never / always / every-K / hysteresis replan triggers
+  (numpy-only; also reused by ``dist.cp_balance`` re-splits).
+- :mod:`.runtime` — the stepped cost loop and policy comparison harness.
+
+Submodules load lazily so policy-only consumers never import jax.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("batch_device", "migrate", "policy", "runtime", "stream")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

@@ -1,0 +1,154 @@
+"""Batched on-device partitioning for time-stepped load frames.
+
+The paper's Section 6 scenario is a simulation whose spatial load drifts
+across time-steps, forcing frequent repartitions.  ``core.device`` handles
+one Gamma; here we vmap the whole chain — SAT build (``kernels.sat.gamma``)
+followed by ``device.jag_m_heur_device`` — over a ``(T, n1, n2)`` batch of
+load frames under a *single* jit, so:
+
+- the load matrices and their prefix tables never leave HBM; only the O(m)
+  cut vectors per frame come back to the host, and
+- one compilation serves all T frames (the batch axis is a vmap axis, not a
+  Python loop), which is what makes per-step replanning affordable.
+
+``Plan`` is the host-side view of one frame's partition: numpy cut vectors
+plus the derived owner map / per-rectangle loads the rebalancing runtime
+needs.  Per-frame results are bit-identical to looped
+``device.jag_m_heur_device`` calls on the same Gamma (regression-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device
+from repro.kernels.sat import ops as sat_ops
+
+__all__ = ["Plan", "gamma_batch", "jag_m_heur_batch", "plan_stream",
+           "unstack_plans"]
+
+
+@functools.partial(jax.jit, static_argnames=("gamma_dtype", "use_pallas",
+                                             "interpret"))
+def gamma_batch(frames: jnp.ndarray, *, gamma_dtype=jnp.float32,
+                use_pallas: bool = False,
+                interpret: bool = True) -> jnp.ndarray:
+    """Gamma for every frame: (T, n1, n2) loads -> (T, n1+1, n2+1) prefixes.
+
+    Frames are cast to ``gamma_dtype`` *before* the scan so accumulation
+    happens in that dtype (f32 saturates above 2**24 total load; pass
+    ``jnp.float64`` with x64 enabled for large integer loads).
+    ``use_pallas=False`` takes the pure-jnp SAT oracle, which vmaps on any
+    backend; on real TPU flip it to lower the blocked Pallas kernel with a
+    leading batch grid axis.
+    """
+    g = jax.vmap(lambda a: sat_ops.gamma(a, use_pallas=use_pallas,
+                                         interpret=interpret))
+    return g(frames.astype(gamma_dtype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("P", "m", "k", "rounds", "gamma_dtype"))
+def jag_m_heur_batch(gammas: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                     rounds: int = 8, gamma_dtype=None):
+    """vmap of ``device.jag_m_heur_device`` over a (T, n1+1, n2+1) batch.
+
+    Returns (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, m_max+1),
+    Lmax (T,)).  One compilation covers all T frames.
+    """
+    fn = functools.partial(device.jag_m_heur_device, P=P, m=m, k=k,
+                           rounds=rounds, gamma_dtype=gamma_dtype)
+    return jax.vmap(fn)(gammas)
+
+
+@functools.partial(jax.jit, static_argnames=("P", "m", "k", "rounds",
+                                             "gamma_dtype", "use_pallas",
+                                             "interpret"))
+def plan_stream(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                rounds: int = 8, gamma_dtype=jnp.float32,
+                use_pallas: bool = False, interpret: bool = True):
+    """SAT + partitioner for a whole (T, n1, n2) stream under one jit.
+
+    The fused chain keeps every intermediate (frames, Gammas) on device;
+    the returned pytree is the O(T * m) cut vectors only.
+    """
+    gammas = gamma_batch(frames, gamma_dtype=gamma_dtype,
+                         use_pallas=use_pallas, interpret=interpret)
+    return jag_m_heur_batch(gammas, P=P, m=m, k=k, rounds=rounds,
+                            gamma_dtype=gamma_dtype)
+
+
+# ---------------------------------------------------------------------------
+# host-side view
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One frame's jagged partition as host numpy cut vectors.
+
+    Processor identity is positional: global index ``sum(counts[:s]) + t``
+    for interval ``t`` of stripe ``s`` — consecutive plans number their
+    rectangles along the same row-major sweep, which is what makes plan
+    diffs (``migrate``) meaningful.
+    """
+
+    row_cuts: np.ndarray          # (P+1,) int
+    counts: np.ndarray            # (P,) int, sums to m
+    col_cuts: np.ndarray          # (P, m_max+1) int, masked past counts[s]
+    shape: tuple[int, int]
+
+    @property
+    def m(self) -> int:
+        return int(self.counts.sum())
+
+    def stripe_col_cuts(self, s: int) -> np.ndarray:
+        """The live cut array of stripe ``s`` (length counts[s] + 1)."""
+        return self.col_cuts[s, :int(self.counts[s]) + 1]
+
+    def owner_map(self) -> np.ndarray:
+        """(n1, n2) int32 map: cell -> global processor index."""
+        own = np.empty(self.shape, dtype=np.int32)
+        base = 0
+        for s in range(len(self.counts)):
+            r0, r1 = int(self.row_cuts[s]), int(self.row_cuts[s + 1])
+            cc = self.stripe_col_cuts(s)
+            band = np.repeat(base + np.arange(len(cc) - 1, dtype=np.int32),
+                             np.diff(cc))
+            own[r0:r1, :] = band[None, :]
+            base += len(cc) - 1
+        return own
+
+    def loads(self, gamma: np.ndarray) -> np.ndarray:
+        """(m,) per-processor loads on an arbitrary frame's host Gamma."""
+        out = np.empty(self.m, dtype=np.asarray(gamma).dtype)
+        base = 0
+        for s in range(len(self.counts)):
+            r0, r1 = int(self.row_cuts[s]), int(self.row_cuts[s + 1])
+            cc = self.stripe_col_cuts(s)
+            band = gamma[r1, cc] - gamma[r0, cc]
+            out[base:base + len(cc) - 1] = np.diff(band)
+            base += len(cc) - 1
+        return out
+
+    def max_load(self, gamma: np.ndarray) -> float:
+        return float(self.loads(gamma).max(initial=0))
+
+    def to_partition(self):
+        """Convert to a ``core.types.Partition`` (validation, plotting)."""
+        from repro.core import types
+        return types.from_row_cuts_and_col_cuts(
+            self.row_cuts, [self.stripe_col_cuts(s)
+                            for s in range(len(self.counts))], self.shape)
+
+
+def unstack_plans(batched, shape: tuple[int, int]) -> list[Plan]:
+    """Split a ``plan_stream``/``jag_m_heur_batch`` pytree into T Plans."""
+    row_cuts, counts, col_cuts, _ = batched
+    rc = np.asarray(row_cuts)
+    ct = np.asarray(counts)
+    cc = np.asarray(col_cuts)
+    return [Plan(rc[t], ct[t], cc[t], shape) for t in range(rc.shape[0])]

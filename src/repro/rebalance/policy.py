@@ -1,0 +1,97 @@
+"""Replanning policies: when is a new partition worth its migration cost?
+
+The runtime charges ``max_load`` per step (the paper's bottleneck metric —
+the step takes as long as its busiest processor) plus, on each replan,
+``replan_overhead + alpha * migration_volume``.  A policy sees one
+:class:`StepState` per frame and answers "replan now?".
+
+``HysteresisPolicy`` is the interesting one: it estimates the *excess* of
+the current plan's bottleneck over what a fresh plan would achieve
+(the bottleneck achieved at the last replan, drift-scaled by total load),
+and replans only when that excess, amortized over ``horizon`` future
+steps, exceeds the predicted migration bill.  The dead-band plus the
+excess formulation give hysteresis both ways: a static stream never
+triggers (excess is exactly 0), and a transient spike shorter than the
+payback horizon is ridden out.
+
+Numpy-only on purpose: ``dist.cp_balance`` reuses these policies for
+long-context re-splits without pulling in jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["StepState", "NeverRebalance", "AlwaysRebalance", "EveryK",
+           "HysteresisPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepState:
+    """Everything a policy may condition on at one time-step."""
+
+    step: int                     # frame index (>= 1; step 0 always plans)
+    max_load: float               # active plan's bottleneck on this frame
+    ideal: float                  # total_load / m (perfect-balance floor)
+    total_load: float
+    achieved_at_replan: float     # bottleneck right after the last replan
+    total_at_replan: float        # total load at the last replan
+    steps_since_replan: int
+    last_migration_volume: float  # weight moved at the last replan (0 at t=0)
+    alpha: float                  # runtime's cost per unit migrated weight
+    replan_overhead: float        # runtime's fixed cost per replan
+
+    @property
+    def expected_fresh(self) -> float:
+        """Predicted fresh-plan bottleneck: the last replan's achievement,
+        scaled by total-load drift, floored at the perfect balance."""
+        scale = self.total_load / max(self.total_at_replan, 1e-30)
+        return max(self.achieved_at_replan * scale, self.ideal)
+
+    @property
+    def excess(self) -> float:
+        """Per-step cost of keeping the stale plan instead of replanning."""
+        return self.max_load - self.expected_fresh
+
+
+class NeverRebalance:
+    """Plan once at t=0, ride it forever (the static baseline)."""
+
+    def decide(self, state: StepState) -> bool:
+        return False
+
+
+class AlwaysRebalance:
+    """Replan every step (the migration-blind baseline)."""
+
+    def decide(self, state: StepState) -> bool:
+        return True
+
+
+@dataclasses.dataclass
+class EveryK:
+    """Fixed-period replanning (the knob real simulations hand-tune)."""
+
+    k: int = 10
+
+    def decide(self, state: StepState) -> bool:
+        return state.steps_since_replan >= self.k
+
+
+@dataclasses.dataclass
+class HysteresisPolicy:
+    """Replan when predicted imbalance x horizon exceeds migration cost.
+
+    horizon: steps over which a fresh plan's gain is assumed to persist.
+    band: relative dead-band — excess below ``band * ideal`` never
+        triggers, whatever the predicted migration bill.
+    """
+
+    horizon: int = 8
+    band: float = 0.02
+
+    def decide(self, state: StepState) -> bool:
+        if state.excess <= self.band * state.ideal:
+            return False
+        predicted_cost = (state.replan_overhead
+                          + state.alpha * state.last_migration_volume)
+        return state.excess * self.horizon > predicted_cost

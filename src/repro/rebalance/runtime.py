@@ -1,0 +1,154 @@
+"""Time-stepped rebalancing runtime over the batched device partitioner.
+
+The execution model (paper Section 6): a frame costs its bottleneck load
+(the step takes as long as the busiest processor), and adopting a new plan
+costs ``replan_overhead + alpha * migration_volume``.  Candidate plans for
+*every* frame are produced upfront by one ``batch_device.plan_stream``
+call — a single compiled vmap over the whole stream, the load matrices
+never leaving the device — so the policy loop on the host only touches
+O(m) cut vectors and the owner maps it diffs.
+
+``compare_policies`` runs several policies over the same precomputed
+candidate plans, which is how the never/always/hysteresis trade-off
+(Fig. 4's motivation) is measured in the benchmarks and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prefix
+
+from . import batch_device, migrate
+from .policy import StepState
+
+__all__ = ["StepRecord", "RunResult", "plan_stream_host", "run_stream",
+           "compare_policies"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    step: int
+    max_load: float          # bottleneck of the plan active *after* this step's decision
+    ideal: float             # total / m
+    replanned: bool
+    migration_volume: float  # weight moved this step (0 unless replanned)
+    migration_cost: float    # alpha * volume + overhead (0 unless replanned)
+
+
+@dataclasses.dataclass
+class RunResult:
+    records: list[StepRecord]
+    final_plan: batch_device.Plan
+
+    @property
+    def compute_cost(self) -> float:
+        return sum(r.max_load for r in self.records)
+
+    @property
+    def migration_cost(self) -> float:
+        return sum(r.migration_cost for r in self.records)
+
+    @property
+    def total_cost(self) -> float:
+        return self.compute_cost + self.migration_cost
+
+    @property
+    def n_replans(self) -> int:
+        return sum(r.replanned for r in self.records[1:])  # t=0 is free
+
+    @property
+    def mean_imbalance(self) -> float:
+        lis = [r.max_load / r.ideal - 1.0 for r in self.records
+               if r.ideal > 0]
+        return float(np.mean(lis)) if lis else 0.0
+
+    def summary(self) -> str:
+        return (f"total={self.total_cost:.3g} "
+                f"(compute={self.compute_cost:.3g}, "
+                f"migrate={self.migration_cost:.3g}) "
+                f"replans={self.n_replans} "
+                f"LI_mean={self.mean_imbalance * 100:.2f}%")
+
+
+def plan_stream_host(frames: np.ndarray, *, P: int, m: int, k: int = 8,
+                     rounds: int = 8,
+                     gamma_dtype=jnp.float32) -> list[batch_device.Plan]:
+    """Candidate plan per frame via one batched device call."""
+    batched = batch_device.plan_stream(jnp.asarray(frames), P=P, m=m, k=k,
+                                       rounds=rounds, gamma_dtype=gamma_dtype)
+    return batch_device.unstack_plans(batched, frames.shape[1:])
+
+
+def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
+               alpha: float = 1.0, replan_overhead: float = 0.0,
+               weight: str = "load", plans: list[batch_device.Plan] | None
+               = None, gammas: list[np.ndarray] | None = None, k: int = 8,
+               rounds: int = 8) -> RunResult:
+    """Drive one policy over a (T, n1, n2) stream.
+
+    weight: "load" charges migration by the moved cells' current load
+    (state size tracks load in PIC-like codes); "cells" charges per cell.
+    Step 0's initial placement is free — every policy pays it equally.
+    ``gammas`` are the per-frame host prefix tables used for exact cost
+    accounting; pass them (with ``plans``) when replaying the same stream
+    under several policies — see :func:`compare_policies`.
+    """
+    if weight not in ("load", "cells"):
+        raise ValueError(f"weight must be 'load' or 'cells', got {weight!r}")
+    frames = np.asarray(frames)
+    if plans is None:
+        plans = plan_stream_host(frames, P=P, m=m, k=k, rounds=rounds)
+    if gammas is None:
+        gammas = [prefix.prefix_sum_2d(f) for f in frames]
+    records: list[StepRecord] = []
+    active = plans[0]
+    g0 = gammas[0]
+    achieved = active.max_load(g0)
+    total_at_replan = float(g0[-1, -1])
+    steps_since = 0
+    last_volume = 0.0
+    records.append(StepRecord(0, achieved, total_at_replan / m, True,
+                              0.0, 0.0))
+    for t in range(1, len(frames)):
+        g = gammas[t]
+        total = float(g[-1, -1])
+        cur_ml = active.max_load(g)
+        steps_since += 1
+        state = StepState(step=t, max_load=cur_ml, ideal=total / m,
+                          total_load=total, achieved_at_replan=achieved,
+                          total_at_replan=total_at_replan,
+                          steps_since_replan=steps_since,
+                          last_migration_volume=last_volume, alpha=alpha,
+                          replan_overhead=replan_overhead)
+        if policy.decide(state):
+            w = frames[t] if weight == "load" else None
+            vol = migrate.migration_volume(active, plans[t], weights=w)
+            cost = replan_overhead + alpha * vol
+            active = plans[t]
+            achieved = active.max_load(g)
+            total_at_replan = total
+            steps_since = 0
+            last_volume = vol
+            records.append(StepRecord(t, achieved, total / m, True, vol,
+                                      cost))
+        else:
+            records.append(StepRecord(t, cur_ml, total / m, False, 0.0,
+                                      0.0))
+    return RunResult(records, active)
+
+
+def compare_policies(frames: np.ndarray, policies: dict, *, P: int, m: int,
+                     alpha: float = 1.0, replan_overhead: float = 0.0,
+                     weight: str = "load", k: int = 8,
+                     rounds: int = 8) -> dict[str, RunResult]:
+    """Run several policies over shared precomputed plans and gammas."""
+    frames = np.asarray(frames)
+    plans = plan_stream_host(frames, P=P, m=m, k=k, rounds=rounds)
+    gammas = [prefix.prefix_sum_2d(f) for f in frames]
+    return {name: run_stream(frames, pol, P=P, m=m, alpha=alpha,
+                             replan_overhead=replan_overhead, weight=weight,
+                             plans=plans, gammas=gammas)
+            for name, pol in policies.items()}

@@ -36,8 +36,13 @@ class Assignment:
 
 
 def plan(requests: list[Request], n_replicas: int, *,
-         algo: str = "optimal", sort: bool = True) -> list[Assignment]:
-    """Partition requests into per-replica groups minimizing the max load."""
+         algo: str = "optimal", sort: bool = True,
+         warm: float | None = None) -> list[Assignment]:
+    """Partition requests into per-replica groups minimizing the max load.
+
+    ``warm`` seeds the optimal path's bisection with a bottleneck from a
+    prior plan (see :func:`replan`); it never changes the resulting cuts.
+    """
     reqs = sorted(requests, key=lambda r: r.prompt_tokens, reverse=True) \
         if sort else list(requests)
     loads = np.array([r.prompt_tokens for r in reqs], dtype=np.int64)
@@ -47,11 +52,32 @@ def plan(requests: list[Request], n_replicas: int, *,
     elif algo == "rb":
         cuts = oned.recursive_bisection(p, n_replicas)
     else:
-        cuts = oned.optimal_1d(p, n_replicas)
+        cuts = oned.optimal_1d(p, n_replicas, warm=warm)
     out = []
     for i in range(n_replicas):
         out.append(Assignment(i, reqs[int(cuts[i]):int(cuts[i + 1])]))
     return out
+
+
+def replan(assignments: list[Assignment], new_requests: list[Request], *,
+           algo: str = "optimal", sort: bool = True) -> list[Assignment]:
+    """Re-partition queued + newly arrived requests, warm-starting from the
+    prior plan.
+
+    The previous assignment's bottleneck (max replica load) seeds the
+    bisection (``oned.probe_bisect_optimal(warm=...)``): one probe turns it
+    into a tightened upper or lower bound, so the search only resolves the
+    load drift the arrivals introduced instead of the full DirectCut
+    interval.  Equivalent cuts to ``plan()`` from scratch — the warm start
+    changes probe count, never the optimum.
+    """
+    if not assignments:
+        raise ValueError("replan needs at least one existing assignment "
+                         "(the replica count comes from the prior plan)")
+    reqs = [r for a in assignments for r in a.requests] + list(new_requests)
+    warm = max(a.load for a in assignments)
+    return plan(reqs, len(assignments), algo=algo, sort=sort,
+                warm=float(warm) if warm > 0 else None)
 
 
 def imbalance(assignments: list[Assignment]) -> float:
