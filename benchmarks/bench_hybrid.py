@@ -1,0 +1,58 @@
+"""Engine-native HYBRID vs the composed-Algo pipeline it replaced.
+
+Times ``hybrid_auto`` (phase 1 JAG-M-HEUR, fast phase 2 JAG-M-HEUR-PROBE,
+slow refinement JAG-PQ-OPT on the floor-sqrt grid) on the paper's Uniform
+instance at 512x512, m=1000, against the pre-engine composed
+implementation (one full phase-1 run per eLI candidate, one partitioner
+call per phase-2 part) — the single frozen copy in
+``tests/_reference.py``, so the perf gate and the equivalence suite
+always compare against the same baseline.  Both record the achieved
+bottleneck — exact and machine-independent, so the perf gate doubles as
+an equivalence gate — and the engine record's ``derived`` field carries
+the measured speedup (the PR's acceptance floor is 2x).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core import hybrid, jagged, prefix
+from .common import emit, timeit
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tests"))
+import _reference as _ref  # noqa: E402  (the frozen composed baseline)
+
+
+def _pq_slow(sg, q):
+    P = max(int(np.sqrt(q)), 1)
+    return jagged.jag_pq_opt(sg, P * (q // P), P=P, Q=q // P)
+
+
+def run(quick: bool = True) -> dict:
+    n, m = 512, 1000
+    A = prefix.uniform_instance(n, n, delta=1.2)
+    g = prefix.prefix_sum_2d(A)
+    reps = 2 if quick else 5
+
+    eng, dt_e = timeit(hybrid.hybrid_auto, g, m, slow="pq", repeats=reps)
+    comp, dt_c = timeit(_ref.hybrid_auto_composed, g, m, phase2=_pq_slow,
+                        repeats=reps)
+    be, bc = eng.max_load(g), comp.max_load(g)
+    assert be <= bc + 1e-9, (be, bc)  # engine must never lose quality
+    emit(f"hybrid.auto.m{m}", dt_e,
+         f"Lmax={be:.0f};speedup={dt_c / dt_e:.2f}x",
+         bottleneck=be, m=m, n=n)
+    emit(f"hybrid.composed.m{m}", dt_c, f"Lmax={bc:.0f}",
+         bottleneck=bc, m=m, n=n)
+
+    fs, dt_f = timeit(hybrid.hybrid_fastslow, g, m, slow="pq",
+                      repeats=1 if quick else 3)
+    bf = fs.max_load(g)
+    assert bf <= be + 1e-9
+    emit(f"hybrid.fastslow.m{m}", dt_f, f"Lmax={bf:.0f}",
+         bottleneck=bf, m=m, n=n)
+    return {"engine_ms": dt_e * 1e3, "composed_ms": dt_c * 1e3,
+            "speedup": dt_c / dt_e}

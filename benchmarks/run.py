@@ -21,6 +21,7 @@ BENCHES = [
     ("fig12_slac", "fig_slac"),
     ("fig14_16_hybrid", "fig_hybrid"),
     ("bench_partitioner", "bench_partitioner"),
+    ("bench_hybrid", "bench_hybrid"),
     ("bench_rebalance", "bench_rebalance"),
     ("moe_placement", "bench_moe_placement"),
     ("cp_balance", "bench_cp_balance"),
@@ -33,14 +34,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench-name substrings; a bench "
+                         "runs when any token matches")
     ap.add_argument("--json", default=None, metavar="FILE",
                     help="dump machine-readable records to FILE")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    only = [t for t in args.only.split(",") if t] if args.only else None
     failed = []
     for name, modname in BENCHES:
-        if args.only and args.only not in name:
+        if only and not any(tok in name for tok in only):
             continue
         print(f"# --- {name}", flush=True)
         try:

@@ -12,11 +12,13 @@
                    but heavy; for small instances / tests only (the paper
                    did not even run it: "expected to run in hours").
 
-Stripe prefix arrays come from a pair of :class:`StripeView` buffers (one
-per orientation) — a bisection tree touches O(m) nodes and the seed
-allocated two fresh O(n) arrays at each; the views reuse one buffer per
-orientation.  The proportional-split candidate scan is shared with 1D
-recursive bisection via ``search.split_candidates``.
+Stripe prefix arrays come from a root :class:`SubgridView` — its
+``dim_prefix`` serves both orientations from one reused buffer each, the
+same windowed access HYBRID's phase-2 machinery uses.  A bisection tree
+touches O(m) nodes and the seed allocated two fresh O(n) arrays at each;
+the view reuses one buffer per orientation.  The proportional-split
+candidate scan is shared with 1D recursive bisection via
+``search.split_candidates``.
 """
 from __future__ import annotations
 
@@ -26,24 +28,23 @@ import numpy as np
 
 from . import search
 from .prefix import rect_load
-from .stripecache import StripeView
+from .stripecache import SubgridView
 from .types import Partition, Rect
 
 
-def _views(gamma: np.ndarray) -> tuple[StripeView, StripeView]:
-    """(row-stripe view: prefixes over columns, col-stripe view: over rows)."""
-    return StripeView(gamma, axis=0), StripeView(gamma, axis=1)
+def _views(gamma: np.ndarray) -> SubgridView:
+    """Root window over gamma; ``dim_prefix`` replaces the seed's per-node
+    stripe re-materialization."""
+    return SubgridView(gamma)
 
 
-def _dim_prefix(views, r: Rect, dim: int) -> tuple[int, int, np.ndarray]:
+def _dim_prefix(views: SubgridView, r: Rect, dim: int
+                ) -> tuple[int, int, np.ndarray]:
     """(lo, hi, prefix array along dim) for cutting rect r along dim.
 
     The returned array lives in the view's shared buffer.
     """
-    sv_row, sv_col = views
-    if dim == 0:  # cut rows: prefix over rows restricted to r's columns
-        return r.r0, r.r1, sv_col.prefix(r.c0, r.c1)
-    return r.c0, r.c1, sv_row.prefix(r.r0, r.r1)
+    return views.dim_prefix(r, dim)
 
 
 def _best_cut_relaxed(gamma: np.ndarray, views, r: Rect, m: int):

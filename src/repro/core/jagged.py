@@ -32,7 +32,7 @@ import numpy as np
 
 from . import oned, search
 from .prefix import row_prefix, transpose_gamma
-from .stripecache import StripeView, stripe_matrix
+from .stripecache import StripeView, SubgridView, stripe_matrix
 from .types import Partition, from_row_cuts_and_col_cuts
 
 # ---------------------------------------------------------------------------
@@ -227,9 +227,18 @@ def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
 
 def _proportional_counts(stripe_loads: np.ndarray, m: int) -> list[int]:
     """Paper's allocation: ceil((m-P) * load/total), leftovers to the stripe
-    maximizing load / Q_S."""
+    maximizing load / Q_S.
+
+    Every count is clamped to >= 1 — a zero-load stripe must still own a
+    processor (its rows exist and must be covered), and a zero count would
+    poison the expected-LI scan's ``loads / counts`` with inf/nan.  Needs
+    ``m >= P``; the shave loop can only run out of shaveable counts when
+    that is violated.
+    """
     stripe_loads = np.asarray(stripe_loads, dtype=np.float64)
     P = len(stripe_loads)
+    if m < P:
+        raise ValueError(f"need m >= #stripes, got m={m} stripes={P}")
     total = float(stripe_loads.sum())
     if total == 0:
         counts = np.ones(P, dtype=np.int64)
@@ -298,7 +307,7 @@ def jag_m_alloc(gamma: np.ndarray, m: int, counts: list[int] | None = None,
     if sum(counts) != m:
         raise ValueError("counts must sum to m")
     P = len(counts)
-    sv = StripeView(gamma)
+    sv = SubgridView(gamma)
 
     @functools.lru_cache(maxsize=None)
     def f(s: int, r0: int) -> tuple[float, int]:
@@ -330,21 +339,20 @@ def jag_m_alloc(gamma: np.ndarray, m: int, counts: list[int] | None = None,
     return _build(gamma, np.asarray(row_cuts), col_cuts)
 
 
-@_with_orientation
-def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
-    """JAG-M-OPT: exact m-way jagged partition (paper Section 3.2.2 DP).
+def jag_m_opt_view(view: SubgridView, m: int, *, warm: float | None = None
+                   ) -> tuple[float, np.ndarray, list[np.ndarray]]:
+    """JAG-M-OPT core on a :class:`SubgridView` window ('hor' orientation).
 
-    L(k, q) = min over k' < k, 1 <= x <= q of
-              max(L(k', q - x), opt1d(stripe[k', k), x)).
-    Pruning: (1) the average-load lower bound stops the x scan early,
-    (2) per-(k', k, x) stripe costs are memoized (StripeView), (3) the k'
-    scan is a binary search on the bi-monotonic crossing. Polynomial but
-    heavy — intended for small instances / benchmarking the heuristics'
-    gap, exactly like the paper (31 min at m=961 in their C++).
+    Returns ``(bottleneck, row_cuts, col_cuts)`` in window coordinates.
+    Stripe costs route through the view's parent-coordinate memo, so a
+    caller re-optimizing overlapping windows (HYBRID's fast/slow loop)
+    never recomputes a stripe's 1D optimum; ``warm`` seeds each fresh
+    stripe bisection with a known bottleneck (e.g. the window's fast-phase
+    solution) — one probe turns it into a tightened bound.
     """
-    n1 = gamma.shape[0] - 1
-    rp = row_prefix(gamma)
-    sv = StripeView(gamma)
+    n1 = view.n1
+    rp = view.row_prefix()
+    cost = functools.partial(view.cost, warm=warm)
 
     @functools.lru_cache(maxsize=None)
     def L(k: int, q: int) -> float:
@@ -364,11 +372,11 @@ def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
             # binary search on k': L(k', q-x) increases with k',
             # stripe_cost(k', k, x) decreases with k'
             lo = search.bisect_index(
-                lambda mid: L(mid, q - x) >= sv.cost(mid, k, x), 0, k - 1)
+                lambda mid: L(mid, q - x) >= cost(mid, k, x), 0, k - 1)
             for kp in (lo - 1, lo, lo + 1):
                 if kp < 0 or kp >= k:
                     continue
-                v = max(L(kp, q - x), sv.cost(kp, k, x))
+                v = max(L(kp, q - x), cost(kp, k, x))
                 if v < best:
                     best = v
         return best
@@ -383,15 +391,31 @@ def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
         target = L(k, q)
         for x in range(1, q + 1):
             for kp in range(k - 1, -1, -1):
-                v = max(L(kp, q - x), sv.cost(kp, k, x))
+                v = max(L(kp, q - x), cost(kp, k, x))
                 if v <= target + 1e-9:
                     return backtrack(kp, q - x) + [(kp, k, x)]
         raise AssertionError("backtrack failed")
 
     stripes = backtrack(n1, m)
-    row_cuts = [0] + [s[1] for s in stripes]
-    col_cuts = oned.optimal_1d_batch(
-        np.asarray([sv.prefix_copy(r0, r1) for r0, r1, _ in stripes]),
-        [x for _, _, x in stripes])
+    row_cuts = np.asarray([0] + [s[1] for s in stripes], dtype=np.int64)
+    sols = [view.cuts_1d(r0, r1, x) for r0, r1, x in stripes]
+    col_cuts = [cc for _, cc in sols]
+    bott = max((c for c, _ in sols), default=0.0)
     L.cache_clear()
-    return _build(gamma, np.asarray(row_cuts), col_cuts)
+    return bott, row_cuts, col_cuts
+
+
+@_with_orientation
+def jag_m_opt(gamma: np.ndarray, m: int) -> Partition:
+    """JAG-M-OPT: exact m-way jagged partition (paper Section 3.2.2 DP).
+
+    L(k, q) = min over k' < k, 1 <= x <= q of
+              max(L(k', q - x), opt1d(stripe[k', k), x)).
+    Pruning: (1) the average-load lower bound stops the x scan early,
+    (2) per-(k', k, x) stripe costs are memoized (:class:`SubgridView`),
+    (3) the k' scan is a binary search on the bi-monotonic crossing.
+    Polynomial but heavy — intended for small instances / benchmarking the
+    heuristics' gap, exactly like the paper (31 min at m=961 in their C++).
+    """
+    _, row_cuts, col_cuts = jag_m_opt_view(SubgridView(gamma), m)
+    return _build(gamma, row_cuts, col_cuts)

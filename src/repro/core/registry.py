@@ -65,11 +65,24 @@ _REGISTRY["hier-opt"] = hier.hier_opt
 
 @register("hybrid")
 def _hybrid_default(gamma, m, P: int | None = None, **kw):
-    """HYBRID(JAG-M-HEUR / JAG-M-OPT) with JAG-M-HEUR-PROBE as the fast
-    phase-2 algorithm — the paper's best-performing configuration."""
-    p1 = functools.partial(jagged.jag_m_heur, orient="hor")
-    p2 = jagged.jag_m_opt
-    fast = functools.partial(jagged.jag_m_heur_probe, orient="hor")
-    if P is not None:
-        return hybrid.hybrid(gamma, m, p1, p2, P, phase2_fast=fast, **kw)
-    return hybrid.hybrid_auto(gamma, m, p1, p2, phase2_fast=fast, **kw)
+    """Engine-native HYBRID (phase 1 JAG-M-HEUR, fast phase 2
+    JAG-M-HEUR-PROBE, slow refinement JAG-M-OPT) — the paper's
+    best-performing configuration on the shared probe state."""
+    return hybrid.hybrid(gamma, m, P=P, **kw)
+
+
+@register("hybrid_auto")
+def _hybrid_auto(gamma, m, **kw):
+    """HYBRID with P from the expected-LI scan (paper Figure 16)."""
+    return hybrid.hybrid_auto(gamma, m, **kw)
+
+
+@register("hybrid_fastslow")
+def _hybrid_fastslow(gamma, m, P: int | None = None, **kw):
+    """HYBRID's time/quality knob: exhaustive fast/slow refinement."""
+    return hybrid.hybrid_fastslow(gamma, m, P=P, **kw)
+
+
+# dash-style aliases matching the rest of the registry's naming
+_REGISTRY["hybrid-auto"] = _REGISTRY["hybrid_auto"]
+_REGISTRY["hybrid-fastslow"] = _REGISTRY["hybrid_fastslow"]

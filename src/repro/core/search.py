@@ -30,8 +30,8 @@ import numpy as np
 
 __all__ = [
     "PackedPrefixes", "bisect_bottleneck", "bisect_bottleneck_batch",
-    "bisect_bottleneck_scalar", "bisect_index", "chain_fits", "realize",
-    "split_candidates",
+    "bisect_bottleneck_multi", "bisect_bottleneck_scalar", "bisect_index",
+    "chain_fits", "realize", "split_candidates",
 ]
 
 
@@ -277,6 +277,46 @@ def bisect_bottleneck_batch(feasible, lo, hi, *, integral: bool,
                     infeas.shape[1] - 1 - infeas[:, ::-1].argmax(axis=1)]
         lo[rows] = np.where(anyi, last, la)
     return [float(hi_f[s]) for s in range(S)]
+
+
+def bisect_bottleneck_multi(packed: PackedPrefixes, groups, caps, lo, hi, *,
+                            integral: bool, width: int = 15) -> list:
+    """G grouped multi-array problems bisected through one packed probe set.
+
+    Each *problem* g owns a contiguous run of packed rows (``groups`` maps
+    packed row -> problem index, non-decreasing) and a processor budget
+    ``caps[g]``; its feasibility for a candidate L is PROBE-M's — the
+    greedy interval counts of its rows must sum to at most ``caps[g]``.
+    All G bisections advance in lockstep: one round probes the still-open
+    problems' candidate matrices through a single ``packed.counts`` call
+    (one searchsorted for every (stripe, problem, candidate) chain), which
+    is what lets HYBRID's phase 2 resolve every part's bottleneck without
+    one ``bisect_bottleneck`` per part.  Returns a list of G
+    realize-values with :func:`bisect_bottleneck`'s exactness contract.
+    """
+    groups = np.asarray(groups, dtype=np.int64)
+    caps = np.asarray(caps, dtype=np.int64)
+    G = caps.shape[0]
+    if groups.size and (np.diff(groups) < 0).any():
+        raise ValueError("groups must be non-decreasing (rows per problem "
+                         "packed contiguously)")
+    starts = np.searchsorted(groups, np.arange(G + 1))
+    if (np.diff(starts) == 0).any():
+        raise ValueError("every problem needs at least one packed row")
+
+    def feasible(cand, probs):
+        spans = list(zip(starts[probs], starts[probs + 1]))
+        member = np.concatenate([np.arange(s, e) for s, e in spans])
+        per = np.array([e - s for s, e in spans], dtype=np.int64)
+        row_Ls = np.repeat(cand, per, axis=0)
+        row_caps = caps[groups[member]][:, None]
+        cnts = packed.counts(row_Ls, row_caps, rows=member)
+        offs = np.concatenate([[0], np.cumsum(per)[:-1]])
+        totals = np.add.reduceat(cnts, offs, axis=0)
+        return totals <= caps[probs][:, None]
+
+    return bisect_bottleneck_batch(feasible, lo, hi, integral=integral,
+                                   width=width)
 
 
 def bisect_bottleneck_scalar(feasible_one, lo, hi, *, integral: bool,

@@ -25,7 +25,8 @@ from repro.rebalance.policy import HysteresisPolicy, StepState
 
 __all__ = [
     "block_costs", "contiguous_plan", "balanced_plan",
-    "interleaved_assignment", "plan_imbalance", "replan_contiguous",
+    "balanced_plan_two_phase", "interleaved_assignment", "plan_imbalance",
+    "replan_contiguous",
 ]
 
 
@@ -63,6 +64,36 @@ def balanced_plan(n_blocks: int, R: int, window_blocks: int = 0
     return oned.optimal_1d(_cost_prefix(n_blocks, window_blocks), R)
 
 
+def balanced_plan_two_phase(n_blocks: int, R: int, window_blocks: int = 0,
+                            *, G: int | None = None) -> np.ndarray:
+    """HYBRID's two-phase shape in 1D: near-optimal contiguous cuts, fast.
+
+    Phase 1 cuts the blocks into ``G`` contiguous supergroups (one small
+    exact solve; ``G`` defaults to the largest divisor of ``R`` at most
+    ``round(sqrt(R))``, so a flat cost profile tiles exactly); phase 2
+    assigns rank counts and in-group cuts with PROBE-M
+    (``oned.nicol_multi`` — every group advances through one packed probe
+    set).  The result can be slightly worse than :func:`balanced_plan`
+    (the supergroup boundaries constrain it) but costs O(sqrt(R))-deep
+    bisections instead of one deep one — the fast candidate
+    :func:`replan_contiguous` grades under a phase-aware policy, whose
+    bottleneck then *warm-seeds* the exact solve when the policy
+    escalates to ``'slow'``.
+    """
+    p = _cost_prefix(n_blocks, window_blocks)
+    if G is None:
+        G = max((d for d in range(1, int(round(np.sqrt(R))) + 1)
+                 if R % d == 0), default=1)
+    G = min(G, R)
+    gcuts = oned.optimal_1d(p, G)
+    subs = [p[gcuts[i]:gcuts[i + 1] + 1] - p[gcuts[i]] for i in range(G)]
+    _, _, sub_cuts = oned.nicol_multi(subs, R)
+    cuts = [np.zeros(1, dtype=np.int64)]
+    for i, cc in enumerate(sub_cuts):
+        cuts.append(np.asarray(cc[1:], dtype=np.int64) + int(gcuts[i]))
+    return np.concatenate(cuts)
+
+
 def interleaved_assignment(n_blocks: int, R: int) -> np.ndarray:
     """Zig-zag block -> rank map: within each band of 2R blocks, rank r
     takes blocks r and 2R-1-r (the ring-attention balancing trick).
@@ -79,7 +110,8 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
                       alpha: float = 0.0, replan_overhead: float = 0.0,
                       last_migration_volume: float = 0.0,
                       steps_since_replan: int = 1,
-                      step: int | None = None) -> tuple[np.ndarray, bool]:
+                      step: int | None = None,
+                      two_phase: bool = False) -> tuple[np.ndarray, bool]:
     """Long-context re-split driven by the rebalance hysteresis policy.
 
     As decoding grows the context from ``prev_cuts[-1]`` to ``n_blocks``
@@ -93,6 +125,15 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
     (``alpha`` / ``replan_overhead``).  Returns ``(cuts, replanned)``.
     A static context (``n_blocks == prev_cuts[-1]``) never triggers: the
     extension *is* the previous optimum, so the gain is exactly zero.
+
+    ``two_phase=True`` makes the replan phase-aware (HYBRID's fast/slow
+    structure): the graded candidate is the cheap
+    :func:`balanced_plan_two_phase` split, and only when the policy — a
+    :class:`~repro.rebalance.policy.TwoPhaseHysteresis` exposing
+    ``mode()`` — escalates to ``'slow'`` is the exact split solved, its
+    bisection *warm-seeded* at the two-phase bottleneck (a sound upper
+    bound by construction).  A plain ``decide()`` policy under
+    ``two_phase=True`` adopts the fast candidate whenever it triggers.
     """
     prev_cuts = np.asarray(prev_cuts, dtype=np.int64)
     R = len(prev_cuts) - 1
@@ -100,7 +141,10 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
     ext = np.minimum(prev_cuts, n_blocks)
     ext[-1] = n_blocks
     max_load = oned.max_interval_load(p_new, ext)
-    cand = oned.optimal_1d(p_new, R, warm=max_load)
+    if two_phase:
+        cand = balanced_plan_two_phase(n_blocks, R, window_blocks)
+    else:
+        cand = oned.optimal_1d(p_new, R, warm=max_load)
     cand_load = oned.max_interval_load(p_new, cand)
     state = StepState(step=step if step is not None else steps_since_replan,
                       max_load=max_load,
@@ -112,9 +156,17 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
                       last_migration_volume=last_migration_volume,
                       alpha=alpha, replan_overhead=replan_overhead)
     policy = policy if policy is not None else HysteresisPolicy()
-    if policy.decide(state):
-        return cand, True
-    return ext, False
+    if hasattr(policy, "mode"):
+        mode = policy.mode(state)
+    else:
+        # a plain decide() policy never escalates: under two_phase it
+        # adopts the fast candidate, otherwise cand is already exact
+        mode = "fast" if policy.decide(state) else "keep"
+    if mode == "keep":
+        return ext, False
+    if mode == "slow" and two_phase:
+        cand = oned.optimal_1d(p_new, R, warm=cand_load)
+    return cand, True
 
 
 def plan_imbalance(plan: np.ndarray, n_blocks: int, R: int,

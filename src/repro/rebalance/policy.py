@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["StepState", "NeverRebalance", "AlwaysRebalance", "EveryK",
-           "HysteresisPolicy"]
+           "HysteresisPolicy", "TwoPhaseHysteresis"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,3 +95,27 @@ class HysteresisPolicy:
         predicted_cost = (state.replan_overhead
                           + state.alpha * state.last_migration_volume)
         return state.excess * self.horizon > predicted_cost
+
+
+@dataclasses.dataclass
+class TwoPhaseHysteresis(HysteresisPolicy):
+    """Phase-aware trigger for two-phase (fast/slow) replanners.
+
+    ``decide`` is inherited unchanged, so this drops into every consumer
+    of :class:`HysteresisPolicy`.  Replanners that can grade their effort
+    (``dist.cp_balance.replan_contiguous(two_phase=True)``, a HYBRID
+    ``hybrid``-vs-``hybrid_fastslow`` replan) call :meth:`mode` instead:
+    below the trigger nothing replans (``'keep'``); a moderate excess
+    buys only the cheap fast-phase replan (``'fast'``); once the per-step
+    excess clears ``slow_band * ideal`` the stale plan is bleeding enough
+    to justify the full refinement (``'slow'``) — whose solver the fast
+    candidate's bottleneck then warm-seeds.
+    """
+
+    slow_band: float = 0.10
+
+    def mode(self, state: StepState) -> str:
+        if not self.decide(state):
+            return "keep"
+        return "slow" if state.excess > self.slow_band * state.ideal \
+            else "fast"

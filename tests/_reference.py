@@ -1,19 +1,25 @@
-"""Verbatim copies of the seed's sequential bisection loops.
+"""Verbatim copies of the replaced sequential/composed implementations.
 
 The shared engine in ``repro.core.search`` replaced six copy-pasted
-halving bisections; these reference implementations preserve the originals
-so the equivalence suite can assert the rewired partitioners return
-*identical bottlenecks* on randomized instances.  The greedy realizers
+halving bisections, and the engine-native HYBRID pipeline replaced the
+composed two-black-box-``Algo`` implementation; these reference copies
+preserve the originals so the equivalence suite can assert the rewired
+partitioners return *identical* (bisections) or *no worse* (HYBRID)
+bottlenecks on randomized instances.  The greedy realizers
 (``probe``/``probe_count``/``probe_multi``) are unchanged from the seed and
 imported directly.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
-from repro.core import oned
+from repro.core import jagged, oned
+from repro.core.jagged import _proportional_counts
 from repro.core.oned import probe, probe_count, probe_multi
 from repro.core.prefix import stripe_col_prefix
+from repro.core.types import Partition, Rect
 
 
 def _lower_bound(p, m):
@@ -210,3 +216,95 @@ def optimal_cuts_given_fixed_max(ps: np.ndarray, k: int) -> np.ndarray:
             else:
                 lo = mid
     return best
+
+
+# ---------------------------------------------------------------------------
+# Composed-Algo HYBRID (the pre-engine implementation, verbatim)
+
+
+def _subgamma(gamma, r):
+    """Gamma of the sub-matrix A[r0:r1, c0:c1], derived from Gamma."""
+    return (gamma[r.r0:r.r1 + 1, r.c0:r.c1 + 1]
+            - gamma[r.r0:r.r1 + 1, r.c0:r.c0 + 1]
+            - gamma[r.r0:r.r0 + 1, r.c0:r.c1 + 1]
+            + gamma[r.r0, r.c0])
+
+
+def _offset(part, r):
+    return [Rect(q.r0 + r.r0, q.r1 + r.r0, q.c0 + r.c0, q.c1 + r.c0)
+            for q in part.rects]
+
+
+def hybrid_composed(gamma, m, phase1, phase2, P, phase2_fast=None):
+    """HYBRID(phase1/phase2) composing whole partitioner calls per phase."""
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    part1 = phase1(gamma, P)
+    parts = part1.rects
+    loads = part1.loads(gamma).astype(np.float64)
+    counts = _proportional_counts(loads, m)
+
+    sub = []
+    for r, q in zip(parts, counts):
+        sg = _subgamma(gamma, r)
+        fast = phase2_fast if phase2_fast is not None else phase2
+        sp = fast(sg, q)
+        sub.append([sp.max_load(sg), r, sg, q, sp])
+
+    if phase2_fast is not None:
+        slowed = set()
+        while True:
+            i = int(np.argmax([s[0] for s in sub]))
+            if i in slowed:
+                break
+            cur, r, sg, q, _ = sub[i]
+            slow = phase2(sg, q)
+            v = slow.max_load(sg)
+            slowed.add(i)
+            if v < cur - 1e-12:
+                sub[i] = [v, r, sg, q, slow]
+            else:
+                break
+
+    rects = []
+    for _, r, _, _, sp in sub:
+        rects.extend(_offset(sp, r))
+    return Partition(rects, (n1, n2), m_target=m)
+
+
+def expected_li_composed(gamma, part1, m):
+    loads = part1.loads(gamma).astype(np.float64)
+    counts = np.asarray(_proportional_counts(loads, m), dtype=np.float64)
+    total = float(gamma[-1, -1])
+    if total == 0:
+        return 0.0
+    return float((loads / counts).max() / (total / m)) - 1.0
+
+
+def hybrid_auto_composed(gamma, m, phase1=None, phase2=None, p_min=None,
+                         phase2_fast=None):
+    """HYBRID with the expected-LI scan re-running phase 1 per candidate.
+
+    Defaults reproduce the pre-engine registry configuration:
+    phase 1 JAG-M-HEUR('hor'), slow JAG-M-OPT, fast JAG-M-HEUR-PROBE('hor').
+    """
+    from repro.core.hybrid import candidate_P_values
+
+    if phase1 is None:
+        phase1 = functools.partial(jagged.jag_m_heur, orient="hor")
+    if phase2 is None:
+        phase2 = jagged.jag_m_opt
+    if phase2_fast is None:
+        phase2_fast = functools.partial(jagged.jag_m_heur_probe,
+                                        orient="hor")
+    if p_min is None:
+        p_min = max(int(np.sqrt(m)), 2)
+    best_P, best_e = None, np.inf
+    for P in candidate_P_values(m, p_min):
+        part1 = phase1(gamma, P)
+        e = expected_li_composed(gamma, part1, m)
+        if e < best_e:
+            best_e, best_P = e, P
+    if best_P is None:
+        best_P = max(min(m // 2, p_min), 1)
+    return hybrid_composed(gamma, m, phase1, phase2, best_P,
+                           phase2_fast=phase2_fast)

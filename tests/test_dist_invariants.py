@@ -46,6 +46,49 @@ def test_cp_balanced_optimal_among_contiguous(nb, R, w):
     assert lmax >= max(float(c.sum()) / R, float(c.max(initial=0))) - 1e-9
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 16), st.integers(0, 12))
+def test_cp_two_phase_valid_and_between_bounds(nb, R, w):
+    """The HYBRID-shaped two-phase split is a valid contiguous cover,
+    never better than the exact split and never worse than equal-count."""
+    if R > nb:
+        R = nb
+    tp = cp_balance.balanced_plan_two_phase(nb, R, window_blocks=w)
+    assert len(tp) == R + 1
+    assert tp[0] == 0 and tp[-1] == nb
+    assert (np.diff(tp) >= 0).all()
+    i_tp = cp_balance.plan_imbalance(tp, nb, R, window_blocks=w)
+    i_opt = cp_balance.plan_imbalance(
+        cp_balance.balanced_plan(nb, R, window_blocks=w), nb, R,
+        window_blocks=w)
+    i_naive = cp_balance.plan_imbalance(
+        cp_balance.contiguous_plan(nb, R), nb, R, window_blocks=w)
+    assert i_opt - 1e-12 <= i_tp <= i_naive + 1e-9
+
+
+def test_cp_phase_aware_replan_modes():
+    """TwoPhaseHysteresis grades the replan: static contexts keep, grown
+    contexts adopt the fast two-phase split, and large excess escalates
+    to the exact split warm-seeded at the two-phase bottleneck."""
+    from repro.rebalance.policy import TwoPhaseHysteresis
+
+    cuts = cp_balance.balanced_plan(64, 8)
+    out, replanned = cp_balance.replan_contiguous(
+        cuts, 64, two_phase=True, policy=TwoPhaseHysteresis())
+    assert not replanned and (out == cuts).all()
+    # a 50% context growth leaves the extension far above ideal: slow mode
+    out, replanned = cp_balance.replan_contiguous(
+        cuts, 96, two_phase=True, policy=TwoPhaseHysteresis())
+    assert replanned
+    np.testing.assert_array_equal(out, cp_balance.balanced_plan(96, 8))
+    # an unreachable slow band stays in fast mode: two-phase cuts adopted
+    out, replanned = cp_balance.replan_contiguous(
+        cuts, 96, two_phase=True, policy=TwoPhaseHysteresis(slow_band=1e9))
+    assert replanned
+    np.testing.assert_array_equal(out,
+                                  cp_balance.balanced_plan_two_phase(96, 8))
+
+
 # ---------------------------------------------------------------------------
 # moe_placement: valid partitions, never worse than the uniform grid
 

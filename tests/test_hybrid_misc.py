@@ -17,6 +17,72 @@ def test_candidate_P_values_cover_plateaus():
         assert v_next <= v
 
 
+def test_candidate_P_values_plateau_property():
+    """Every feasible P maps into a listed plateau end: for each P in
+    [p_min, m//2] some candidate >= P shares its ceil((m-P)/P) value, the
+    listed values are strictly increasing, and tiny m degenerates
+    cleanly."""
+    for m, p_min in [(8, 2), (16, 2), (100, 10), (512, 16), (513, 2),
+                     (1000, 31), (997, 5), (64, 64)]:
+        cands = hybrid.candidate_P_values(m, p_min)
+        assert all(b > a for a, b in zip(cands, cands[1:]))  # strict
+        lo = max(p_min, 2)
+        assert all(lo <= P <= m // 2 for P in cands)
+
+        def v(P):
+            return -(-(m - P) // P)  # ceil((m-P)/P)
+
+        # every listed value sits on a plateau boundary: the ceil value
+        # changes right after it (last of its plateau) or right before it
+        # (first — happens when v divides m), except the scan cap m//2
+        for c in cands:
+            assert c == m // 2 or v(c + 1) < v(c) or v(c - 1) > v(c), \
+                (m, p_min, c)
+        # every feasible P maps into a listed end at or above it whose
+        # ceil value is no coarser — the scan never skips a plateau
+        for P in range(lo, m // 2 + 1):
+            ends = [c for c in cands if c >= P]
+            assert ends and v(ends[0]) <= v(P), (m, p_min, P)
+    # m = 2, 3: no P satisfies 2 <= P <= m//2 — the scan list is empty
+    assert hybrid.candidate_P_values(2, 2) == []
+    assert hybrid.candidate_P_values(3, 2) == []
+    # m = 4: the single plateau end is P = 2
+    assert hybrid.candidate_P_values(4, 2) == [2]
+    # ... and the auto pipeline still works at those sizes
+    A = np.arange(1, 37, dtype=np.int64).reshape(6, 6)
+    g = prefix.prefix_sum_2d(A)
+    for m in (2, 3, 4):
+        p = hybrid.hybrid_auto(g, m)
+        assert p.is_valid() and p.m == m
+
+
+def test_expected_li_all_zero_stripe_no_nan():
+    """Regression: a phase-1 part with zero load must get Q_r >= 1 so the
+    eLI scan's loads / counts never emits inf/nan."""
+    A = np.ones((12, 12), dtype=np.int64) * 7
+    A[4:8] = 0  # an all-zero stripe phase 1 will isolate
+    g = prefix.prefix_sum_2d(A)
+    p1 = registry.partition("jag-m-heur-hor", g, 3)
+    with np.errstate(divide="raise", invalid="raise"):
+        e = hybrid.expected_li(g, p1, 12)
+    assert np.isfinite(e) and e >= 0.0
+    # the full pipeline survives the degenerate stripe too
+    with np.errstate(divide="raise", invalid="raise"):
+        part = hybrid.hybrid_auto(g, 12)
+    assert part.is_valid()
+    # all-zero matrix: eLI is defined as 0
+    gz = prefix.prefix_sum_2d(np.zeros((6, 6), dtype=np.int64))
+    pz = registry.partition("jag-m-heur-hor", gz, 2)
+    assert hybrid.expected_li(gz, pz, 8) == 0.0
+
+
+def test_proportional_counts_reject_m_below_parts():
+    from repro.core.jagged import _proportional_counts
+    with pytest.raises(ValueError):
+        _proportional_counts(np.array([1.0, 2.0, 3.0]), 2)
+    assert _proportional_counts(np.zeros(3), 3) == [1, 1, 1]
+
+
 def test_expected_li_perfect_partition():
     A = np.full((8, 8), 5, dtype=np.int64)
     g = prefix.prefix_sum_2d(A)
@@ -40,7 +106,7 @@ def test_registry_names_complete():
     for required in ["rect-uniform", "rect-nicol", "jag-pq-heur",
                      "jag-pq-opt", "jag-m-heur", "jag-m-heur-probe",
                      "jag-m-alloc", "jag-m-opt", "hier-rb", "hier-relaxed",
-                     "hier-opt", "hybrid"]:
+                     "hier-opt", "hybrid", "hybrid_auto", "hybrid_fastslow"]:
         assert required in names, required
 
 

@@ -7,13 +7,14 @@ return *identical* bottlenecks to the seed's sequential halving loops
 200+ randomized instances including degenerate all-zero rows/columns and
 m > n, plus a perf smoke test guarding against Python-loop regressions.
 """
+import functools
 import time
 
 import numpy as np
 import pytest
 
 import _reference as ref
-from repro.core import jagged, oned, prefix, rect, search
+from repro.core import hybrid, jagged, oned, prefix, rect, search
 
 
 def _random_prefix(rng, float_dtype=False):
@@ -140,6 +141,66 @@ def test_float_boundary_realization():
             got = oned.max_interval_load(p, cuts)
             want = oned.max_interval_load(p, ref.probe_bisect_optimal(p, m))
             assert got <= want * (1 + 1e-6) + 1e-9
+
+
+def test_hybrid_engine_never_worse_than_composed():
+    """Engine-native HYBRID vs the composed-Algo implementation it
+    replaced (kept verbatim in tests/_reference.py): on 100+ randomized
+    instances — including zero rows/columns, all-zero matrices and
+    non-square m — the engine's achieved bottleneck is <= the composed
+    baseline's.  (The pipelines walk identical algorithms, so in practice
+    the bottlenecks are bit-equal; <= is the contract.)"""
+    rng = np.random.default_rng(1104)
+    for trial in range(110):
+        n1, n2 = int(rng.integers(3, 22)), int(rng.integers(3, 22))
+        A = rng.integers(0, 30, (n1, n2)).astype(np.int64)
+        if trial % 6 == 0:
+            A[int(rng.integers(0, n1))] = 0  # zero row
+        if trial % 7 == 0:
+            A[:, int(rng.integers(0, n2))] = 0  # zero column
+        if trial % 13 == 0:
+            A[:] = 0  # fully degenerate
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(2, 40))
+        got = hybrid.hybrid_auto(g, m)
+        want = ref.hybrid_auto_composed(g, m)
+        assert got.is_valid(), (trial, n1, n2, m)
+        assert got.m == m
+        assert got.max_load(g) <= want.max_load(g) + 1e-9, \
+            (trial, n1, n2, m, got.max_load(g), want.max_load(g))
+
+
+def test_hybrid_fixed_P_matches_composed():
+    """Same guard for the fixed-P path (no eLI scan)."""
+    rng = np.random.default_rng(7)
+    for trial in range(40):
+        n1, n2 = int(rng.integers(4, 18)), int(rng.integers(4, 18))
+        A = rng.integers(0, 25, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(4, 30))
+        P = int(rng.integers(1, max(m // 2, 2)))
+        got = hybrid.hybrid(g, m, P=P)
+        want = ref.hybrid_composed(
+            g, m, functools.partial(jagged.jag_m_heur, orient="hor"),
+            jagged.jag_m_opt, P,
+            phase2_fast=functools.partial(jagged.jag_m_heur_probe,
+                                          orient="hor"))
+        assert got.is_valid()
+        assert got.max_load(g) <= want.max_load(g) + 1e-9, (trial, m, P)
+
+
+def test_hybrid_fastslow_never_worse_than_hybrid():
+    """The exhaustive refinement knob can only improve the bottleneck."""
+    rng = np.random.default_rng(23)
+    for _ in range(20):
+        n1, n2 = int(rng.integers(6, 20)), int(rng.integers(6, 20))
+        A = rng.integers(0, 30, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(4, 25))
+        base = hybrid.hybrid(g, m)
+        fs = hybrid.hybrid_fastslow(g, m)
+        assert fs.is_valid()
+        assert fs.max_load(g) <= base.max_load(g) + 1e-9
 
 
 def test_grep_constraint_single_bisection_loop():
