@@ -5,6 +5,10 @@ Three records cover the subsystem's hot paths and its core claim:
 - ``rebalance.batch`` — one fused SAT+partition call over T frames
   (derived: frames/sec; the ISSUE's headline metric at T=64, 256x256,
   m=64) vs the looped per-frame device calls it replaces.
+- ``rebalance.plan.sharded`` — the same stream through the mesh-sharded
+  planner (each device owns a time slice; cuts bit-identical to the
+  1-device path); emitted only when the platform exposes >1 device — the
+  CI multi-device leg forces 8 host devices via XLA_FLAGS.
 - ``rebalance.migrate`` — owner-map diff between consecutive covers.
 - ``rebalance.policy`` — never/always/hysteresis total cost on the
   drifting-hotspot stream; the ``bottleneck`` field encodes the cost
@@ -13,10 +17,13 @@ Three records cover the subsystem's hot paths and its core claim:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.rebalance import batch_device, migrate, policy, runtime, stream
+from repro.dist import ctx
+from repro.rebalance import batch_device, migrate, planner, policy, \
+    runtime, stream
 from .common import emit, timeit
 
 
@@ -49,6 +56,27 @@ def run(quick: bool = True) -> dict:
     emit(f"rebalance.loop.T{T}.n{n}.m{m}", dt_loop,
          f"fps={T / dt_loop:.0f};speedup={dt_loop / dt_batch:.2f}x")
 
+    D = jax.device_count()
+    if D > 1:
+        mesh = ctx.planner_mesh(D)
+
+        def sharded():
+            out = planner.plan_stream(fj, P=P, m=m, mesh=mesh)
+            out[3].block_until_ready()
+            return out
+
+        sh = sharded()  # compile
+        for a, b in zip(sh, batched):  # sharded cuts must stay bit-identical
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        _, dt_shard = timeit(sharded, repeats=3)
+        emit(f"rebalance.plan.sharded.D{D}.T{T}.n{n}.m{m}", dt_shard,
+             f"fps={T / dt_shard:.0f};speedup={dt_batch / dt_shard:.2f}x"
+             f"_vs_1dev")
+    else:
+        print("# rebalance.plan.sharded skipped: 1 device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)", flush=True)
+        dt_shard = None
+
     plans = batch_device.unstack_plans(batched, (n, n))
     (_, dt_mig) = timeit(migrate.migration_volume, plans[0], plans[T // 2],
                          repeats=3)
@@ -72,4 +100,5 @@ def run(quick: bool = True) -> dict:
          bottleneck="hyst<min(never,always)" if order_ok else "ORDER-BROKEN")
     assert order_ok
     return {"fps_batch": T / dt_batch, "fps_loop": T / dt_loop,
+            "fps_sharded": None if dt_shard is None else T / dt_shard,
             "hyst": hyst, "never": nev, "always": alw}

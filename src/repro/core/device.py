@@ -135,11 +135,13 @@ def _stripe_bottleneck(p, cuts):
     return jnp.max(jnp.take(p, cuts[1:]) - jnp.take(p, cuts[:-1]))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("P", "m", "k", "rounds", "gamma_dtype"))
-def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
-                      rounds: int = 8, gamma_dtype=None):
-    """JAG-M-HEUR fully on device.
+def jag_m_heur_device_impl(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                           rounds: int = 8, gamma_dtype=None):
+    """Unjitted body of :func:`jag_m_heur_device`.
+
+    Pipelines that fuse this with other kernels under a single jit (the
+    rebalancing planner's partition stage) call the body directly so the
+    composed chain keeps exactly one jit boundary.
 
     gamma: (n1+1, n2+1) device prefix sums (e.g. from kernels/sat).
     gamma_dtype: floating dtype for the bisection accumulators (row and
@@ -197,3 +199,12 @@ def jag_m_heur_device(gamma: jnp.ndarray, *, P: int, m: int, k: int = 8,
 
     col_cuts, bots = jax.vmap(stripe_optimal)(stripe_prefix, counts)
     return row_cuts, counts, col_cuts, jnp.max(bots)
+
+
+jag_m_heur_device = jax.jit(
+    jag_m_heur_device_impl,
+    static_argnames=("P", "m", "k", "rounds", "gamma_dtype"))
+# same contract as the impl, stated once there — only the first line differs
+jag_m_heur_device.__doc__ = ("JAG-M-HEUR fully on device (jitted).\n"
+                             + jag_m_heur_device_impl.__doc__
+                             .split("\n", 1)[1])

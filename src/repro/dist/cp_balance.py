@@ -21,7 +21,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import oned
-from repro.rebalance.policy import HysteresisPolicy, StepState
+from repro.rebalance.policy import HysteresisPolicy, StepState, \
+    replan_mode
 
 __all__ = [
     "block_costs", "contiguous_plan", "balanced_plan",
@@ -156,12 +157,10 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
                       last_migration_volume=last_migration_volume,
                       alpha=alpha, replan_overhead=replan_overhead)
     policy = policy if policy is not None else HysteresisPolicy()
-    if hasattr(policy, "mode"):
-        mode = policy.mode(state)
-    else:
-        # a plain decide() policy never escalates: under two_phase it
-        # adopts the fast candidate, otherwise cand is already exact
-        mode = "fast" if policy.decide(state) else "keep"
+    # graded through the planner API's shared decision point: a plain
+    # decide() policy never escalates — under two_phase it adopts the
+    # fast candidate, otherwise cand is already exact
+    mode = replan_mode(policy, state)
     if mode == "keep":
         return ext, False
     if mode == "slow" and two_phase:

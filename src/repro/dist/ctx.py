@@ -105,6 +105,48 @@ def constrain(x, *spec):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
 
 
+def planner_mesh(n_devices: int | None = None, *, devices=None,
+                 axis: str = "data"):
+    """1-D mesh over host devices for frame-sharded stream planning.
+
+    The rebalancing planner (``repro.rebalance.planner``) shards the time
+    axis of a frame stream over the data-parallel axis; this is the
+    entry point that names it.  The axis vocabulary is shared with
+    ``repro.launch.mesh`` (``DP_AXES``), so a planner mesh composes with
+    :func:`dp_axes` / :func:`resolve` like the production meshes do.
+
+    Deliberately touches jax device state only when called (this module
+    stays import-light; the dry-run sets XLA_FLAGS before first init).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(f"planner_mesh: {n_devices} devices requested, "
+                             f"{len(devs)} available (set XLA_FLAGS="
+                             f"--xla_force_host_platform_device_count=N "
+                             f"before jax initializes to force host devices)")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), (axis,))
+
+
+def planner_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes a frame stream is sharded over: the DP axes.
+
+    Shared resolution point for ``rebalance.planner`` and
+    ``launch.mesh`` — a 1-D :func:`planner_mesh` and the production
+    2-/3-axis meshes answer through the same ``DP_AXES`` order.
+    """
+    axes = dp_axes(mesh)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no data-parallel axis "
+                         f"(expected one of {DP_AXES})")
+    return axes
+
+
 def abstract_mesh(shape, axes):
     """Version-portable ``AbstractMesh`` (jax >= 0.5 takes (shape, axes);
     0.4.x takes a tuple of (name, size) pairs)."""

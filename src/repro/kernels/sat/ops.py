@@ -1,4 +1,13 @@
-"""Public jit'd wrappers around the SAT kernel."""
+"""Public jit'd wrappers around the SAT kernel.
+
+``sat_impl`` / ``gamma_impl`` are the unjitted bodies: stages that compose
+several kernels under one jit (``repro.rebalance.planner``) call these so
+the whole pipeline stays a single jit boundary; ``sat`` / ``gamma`` are
+the standalone jitted entry points.  Both accept a ``(n1, n2)`` frame or
+a ``(B, n1, n2)`` stack — the batch dimension rides the kernel's leading
+grid axis (or the oracle's trailing-axes cumsum), so batched/sharded
+traces never fall back to a per-frame Python loop.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,8 +15,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .ref import gamma_ref, sat_ref
+from .ref import gamma_from_sat, gamma_ref, sat_ref
 from .sat import sat_pallas
+
+
+def sat_impl(a: jnp.ndarray, *, use_pallas: bool = True,
+             interpret: bool = True) -> jnp.ndarray:
+    if not use_pallas:
+        return sat_ref(a)
+    return sat_pallas(a, interpret=interpret)
+
+
+def gamma_impl(a: jnp.ndarray, *, use_pallas: bool = True,
+               interpret: bool = True) -> jnp.ndarray:
+    if not use_pallas:
+        return gamma_ref(a)
+    return gamma_from_sat(sat_pallas(a, interpret=interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -15,17 +38,11 @@ def sat(a: jnp.ndarray, *, use_pallas: bool = True,
         interpret: bool = True) -> jnp.ndarray:
     """Inclusive 2D prefix sum. ``interpret=True`` runs the Pallas kernel
     body on CPU (this container); on real TPU pass ``interpret=False``."""
-    if not use_pallas:
-        return sat_ref(a)
-    return sat_pallas(a, interpret=interpret)
+    return sat_impl(a, use_pallas=use_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def gamma(a: jnp.ndarray, *, use_pallas: bool = True,
           interpret: bool = True) -> jnp.ndarray:
-    """The paper's Gamma array: exclusive prefix, shape (n1+1, n2+1)."""
-    if not use_pallas:
-        return gamma_ref(a)
-    s = sat_pallas(a, interpret=interpret)
-    out = jnp.zeros((a.shape[0] + 1, a.shape[1] + 1), dtype=s.dtype)
-    return out.at[1:, 1:].set(s)
+    """The paper's Gamma array: exclusive prefix, shape (..., n1+1, n2+1)."""
+    return gamma_impl(a, use_pallas=use_pallas, interpret=interpret)

@@ -3,12 +3,23 @@ import jax.numpy as jnp
 
 
 def sat_ref(a: jnp.ndarray) -> jnp.ndarray:
-    """Inclusive 2D prefix sum: out[i, j] = a[:i+1, :j+1].sum()."""
-    return jnp.cumsum(jnp.cumsum(a, axis=0), axis=1)
+    """Inclusive 2D prefix sum: out[..., i, j] = a[..., :i+1, :j+1].sum().
+
+    Batched inputs ``(B, n1, n2)`` prefix each frame independently (the
+    scan axes are the trailing two), matching the kernel's batch grid axis.
+    """
+    return jnp.cumsum(jnp.cumsum(a, axis=-2), axis=-1)
+
+
+def gamma_from_sat(s: jnp.ndarray) -> jnp.ndarray:
+    """Embed an inclusive SAT as the paper's exclusive Gamma: one zero row
+    and column prepended, shape (..., n1+1, n2+1).  The single owner of
+    the embedding — both the oracle and the Pallas path go through it."""
+    out = jnp.zeros(s.shape[:-2] + (s.shape[-2] + 1, s.shape[-1] + 1),
+                    dtype=s.dtype)
+    return out.at[..., 1:, 1:].set(s)
 
 
 def gamma_ref(a: jnp.ndarray) -> jnp.ndarray:
-    """Exclusive 2D prefix sum (the paper's Gamma), shape (n1+1, n2+1)."""
-    s = sat_ref(a)
-    out = jnp.zeros((a.shape[0] + 1, a.shape[1] + 1), dtype=s.dtype)
-    return out.at[1:, 1:].set(s)
+    """Exclusive 2D prefix sum (the paper's Gamma), shape (..., n1+1, n2+1)."""
+    return gamma_from_sat(sat_ref(a))

@@ -5,16 +5,24 @@ any rectangle load is four lookups. The paper builds it on the host (~40 ms
 for 512x512); for on-device rebalancing of large grids we build it on-TPU.
 
 TPU-native design (HBM -> VMEM -> VREG):
-- Two separable passes: row-scan (cumsum along axis 1) then column-scan
-  (cumsum along axis 0). Each pass is a single ``pl.pallas_call`` whose grid
-  walks tiles; the *innermost* grid axis advances along the scan direction,
-  and a VMEM scratch carries the running tile-edge sums between consecutive
-  grid steps (TPU grids execute sequentially, so the carry is well-defined).
+- Two separable passes: row-scan (cumsum along the last axis) then
+  column-scan (cumsum along the row axis). Each pass is a single
+  ``pl.pallas_call`` whose grid walks tiles; the *innermost* grid axis
+  advances along the scan direction, and a VMEM scratch carries the running
+  tile-edge sums between consecutive grid steps (TPU grids execute
+  sequentially, so the carry is well-defined).
+- The grid carries a *leading batch axis*: a ``(B, n1, n2)`` frame stack is
+  one kernel launch with grid ``(B, rows, cols)``, each frame's carry
+  re-initialized when its innermost scan index restarts. This is what lets
+  the frame-sharded rebalancing planner keep the Pallas path under a
+  batched (vmap/shard_map) trace instead of falling back to the jnp oracle
+  — a 2D input is just the ``B=1`` case.
 - Tile shapes are multiples of the (8, 128) f32 VREG tiling; the default
   (256, 512) f32 tile is 512 KiB, comfortably inside the ~16 MiB VMEM even
   with input+output+carry resident.
 - The scan itself is ``jnp.cumsum`` on-tile (VPU); no MXU use — this kernel
-  is memory-bound by construction, moving 2 x n1 x n2 x 4 bytes per pass.
+  is memory-bound by construction, moving 2 x B x n1 x n2 x 4 bytes per
+  pass.
 """
 from __future__ import annotations
 
@@ -27,61 +35,67 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _row_scan_kernel(x_ref, o_ref, carry_ref):
-    """cumsum along axis 1 of each row-band; carry: (bm, 1) running sums."""
-    j = pl.program_id(1)
+    """cumsum along axis 2 of each (1, bm, bn) tile; carry: (1, bm, 1)."""
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
-    def _init():
+    def _init():  # new (frame, row-band): reset the running edge sums
         carry_ref[...] = jnp.zeros_like(carry_ref)
 
-    c = jnp.cumsum(x_ref[...], axis=1) + carry_ref[...]
+    c = jnp.cumsum(x_ref[...], axis=2) + carry_ref[...]
     o_ref[...] = c
-    carry_ref[...] = c[:, -1:]
+    carry_ref[...] = c[:, :, -1:]
 
 
 def _col_scan_kernel(x_ref, o_ref, carry_ref):
-    """cumsum along axis 0 of each column-band; carry: (1, bn)."""
-    r = pl.program_id(1)
+    """cumsum along axis 1 of each (1, bm, bn) tile; carry: (1, 1, bn)."""
+    r = pl.program_id(2)
 
     @pl.when(r == 0)
     def _init():
         carry_ref[...] = jnp.zeros_like(carry_ref)
 
-    c = jnp.cumsum(x_ref[...], axis=0) + carry_ref[...]
+    c = jnp.cumsum(x_ref[...], axis=1) + carry_ref[...]
     o_ref[...] = c
-    carry_ref[...] = c[-1:, :]
+    carry_ref[...] = c[:, -1:, :]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def sat_pallas(a: jnp.ndarray, *, bm: int = 256, bn: int = 512,
                interpret: bool = False) -> jnp.ndarray:
-    """Inclusive 2D prefix sum of ``a`` via two blocked Pallas passes."""
-    n1, n2 = a.shape
+    """Inclusive 2D prefix sum via two blocked Pallas passes.
+
+    ``a`` is ``(n1, n2)`` or a batched ``(B, n1, n2)`` frame stack; the
+    batch dimension becomes the outermost grid axis (one launch, carries
+    reset per frame), never a Python loop.
+    """
+    squeeze = a.ndim == 2
+    x = a[None] if squeeze else a
+    B, n1, n2 = x.shape
     pad1 = (-n1) % bm
     pad2 = (-n2) % bn
-    x = jnp.pad(a, ((0, pad1), (0, pad2)))  # zero pad: no effect on prefix
-    m1, m2 = x.shape
-    grid_rows = (m1 // bm, m2 // bn)
+    x = jnp.pad(x, ((0, 0), (0, pad1), (0, pad2)))  # zero pad: prefix-safe
+    m1, m2 = x.shape[1], x.shape[2]
 
     pass1 = pl.pallas_call(
         _row_scan_kernel,
-        grid=grid_rows,  # innermost axis walks along columns (scan axis)
-        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m1, m2), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, 1), x.dtype)],
+        grid=(B, m1 // bm, m2 // bn),  # innermost walks along columns
+        in_specs=[pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, m1, m2), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bm, 1), x.dtype)],
         interpret=interpret,
     )(x)
 
-    grid_cols = (m2 // bn, m1 // bm)  # innermost axis walks down rows
     pass2 = pl.pallas_call(
         _col_scan_kernel,
-        grid=grid_cols,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j))],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m1, m2), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, bn), x.dtype)],
+        grid=(B, m2 // bn, m1 // bm),  # innermost walks down rows
+        in_specs=[pl.BlockSpec((1, bm, bn), lambda b, j, i: (b, i, j))],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, j, i: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, m1, m2), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1, bn), x.dtype)],
         interpret=interpret,
     )(pass1)
 
-    return pass2[:n1, :n2]
+    out = pass2[:, :n1, :n2]
+    return out[0] if squeeze else out

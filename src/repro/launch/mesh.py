@@ -7,6 +7,13 @@ from __future__ import annotations
 
 import jax
 
+# Single source of truth for the data-parallel axis vocabulary: dist.ctx
+# owns DP_AXES and the resolution order; this module only re-exports it so
+# launcher code keeps its historical import path.
+from repro.dist.ctx import dp_axes
+
+__all__ = ["make_production_mesh", "make_local_mesh", "dp_axes"]
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -17,9 +24,3 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """1-device mesh with the production axis names (tests/examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
-
-
-def dp_axes(mesh) -> tuple[str, ...]:
-    """The data-parallel axes: ('pod', 'data') on multi-pod, else ('data',)."""
-    names = mesh.axis_names
-    return tuple(a for a in ("pod", "data") if a in names)

@@ -4,6 +4,9 @@ Turns the one-shot partitioners into a streaming runtime:
 
 - :mod:`.batch_device` — SAT + ``jag_m_heur_device`` vmapped over a
   (T, n1, n2) frame batch under one jit; only O(m) cuts leave HBM.
+- :mod:`.planner` — the same chain as composable stages, executed on one
+  device or frame-sharded over a ``dist.ctx.planner_mesh`` (bit-identical
+  cuts), with lazy per-slice iteration for planning/policy overlap.
 - :mod:`.stream` — time-evolving workload generators (drifting hotspots,
   particle advection, AMR bursts, the paper's PIC series).
 - :mod:`.migrate` — plan diffing: migration volume / flow / churn.
@@ -17,7 +20,8 @@ from __future__ import annotations
 
 import importlib
 
-_SUBMODULES = ("batch_device", "migrate", "policy", "runtime", "stream")
+_SUBMODULES = ("batch_device", "migrate", "planner", "policy", "runtime",
+               "stream")
 
 __all__ = list(_SUBMODULES)
 

@@ -2,14 +2,21 @@
 
 The paper's Section 6 scenario is a simulation whose spatial load drifts
 across time-steps, forcing frequent repartitions.  ``core.device`` handles
-one Gamma; here we vmap the whole chain — SAT build (``kernels.sat.gamma``)
-followed by ``device.jag_m_heur_device`` — over a ``(T, n1, n2)`` batch of
-load frames under a *single* jit, so:
+one Gamma; here the whole chain — SAT build (``kernels.sat``) followed by
+``device.jag_m_heur_device`` — runs over a ``(T, n1, n2)`` batch of load
+frames under a *single* jit, so:
 
 - the load matrices and their prefix tables never leave HBM; only the O(m)
   cut vectors per frame come back to the host, and
 - one compilation serves all T frames (the batch axis is a vmap axis, not a
   Python loop), which is what makes per-step replanning affordable.
+
+The pipeline itself lives in ``repro.rebalance.planner`` as composable
+stages (ingest -> SAT -> partition -> collect); this module is the
+single-device reference entry point (``plan_stream`` composes the
+*unjitted* stage bodies under exactly one jit boundary — regression-tested
+— while the planner's mesh path shards the same stages over devices) plus
+the host-side ``Plan`` view.
 
 ``Plan`` is the host-side view of one frame's partition: numpy cut vectors
 plus the derived owner map / per-rectangle loads the rebalancing runtime
@@ -25,8 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import device
-from repro.kernels.sat import ops as sat_ops
+from repro.rebalance import planner
 
 __all__ = ["Plan", "gamma_batch", "jag_m_heur_batch", "plan_stream",
            "unstack_plans"]
@@ -39,16 +45,16 @@ def gamma_batch(frames: jnp.ndarray, *, gamma_dtype=jnp.float32,
                 interpret: bool = True) -> jnp.ndarray:
     """Gamma for every frame: (T, n1, n2) loads -> (T, n1+1, n2+1) prefixes.
 
+    The jitted standalone form of the planner's ingest + SAT stages.
     Frames are cast to ``gamma_dtype`` *before* the scan so accumulation
     happens in that dtype (f32 saturates above 2**24 total load; pass
     ``jnp.float64`` with x64 enabled for large integer loads).
-    ``use_pallas=False`` takes the pure-jnp SAT oracle, which vmaps on any
-    backend; on real TPU flip it to lower the blocked Pallas kernel with a
-    leading batch grid axis.
+    ``use_pallas=False`` takes the pure-jnp SAT oracle; on real TPU flip
+    it to lower the blocked Pallas kernel with a leading batch grid axis.
     """
-    g = jax.vmap(lambda a: sat_ops.gamma(a, use_pallas=use_pallas,
-                                         interpret=interpret))
-    return g(frames.astype(gamma_dtype))
+    return planner.sat_stage(
+        planner.ingest_stage(frames, gamma_dtype=gamma_dtype),
+        use_pallas=use_pallas, interpret=interpret)
 
 
 @functools.partial(jax.jit,
@@ -57,12 +63,12 @@ def jag_m_heur_batch(gammas: jnp.ndarray, *, P: int, m: int, k: int = 8,
                      rounds: int = 8, gamma_dtype=None):
     """vmap of ``device.jag_m_heur_device`` over a (T, n1+1, n2+1) batch.
 
-    Returns (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, m_max+1),
+    The jitted standalone form of the planner's partition stage.  Returns
+    (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, m_max+1),
     Lmax (T,)).  One compilation covers all T frames.
     """
-    fn = functools.partial(device.jag_m_heur_device, P=P, m=m, k=k,
-                           rounds=rounds, gamma_dtype=gamma_dtype)
-    return jax.vmap(fn)(gammas)
+    return planner.partition_stage(gammas, P=P, m=m, k=k, rounds=rounds,
+                                   gamma_dtype=gamma_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("P", "m", "k", "rounds",
@@ -73,13 +79,16 @@ def plan_stream(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
                 use_pallas: bool = False, interpret: bool = True):
     """SAT + partitioner for a whole (T, n1, n2) stream under one jit.
 
-    The fused chain keeps every intermediate (frames, Gammas) on device;
-    the returned pytree is the O(T * m) cut vectors only.
+    Composes the planner's *unjitted* stage bodies directly, so the fused
+    chain has exactly one jit boundary — one compilation (and one cache
+    entry) per (shape, P, m, ...) signature, with every intermediate
+    (frames, Gammas) kept on device; the returned pytree is the O(T * m)
+    cut vectors only.  The mesh-sharded twin is
+    ``repro.rebalance.planner.plan_stream(mesh=...)``.
     """
-    gammas = gamma_batch(frames, gamma_dtype=gamma_dtype,
-                         use_pallas=use_pallas, interpret=interpret)
-    return jag_m_heur_batch(gammas, P=P, m=m, k=k, rounds=rounds,
-                            gamma_dtype=gamma_dtype)
+    return planner.plan_frames(frames, P=P, m=m, k=k, rounds=rounds,
+                               gamma_dtype=gamma_dtype,
+                               use_pallas=use_pallas, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -109,30 +118,52 @@ class Plan:
         """The live cut array of stripe ``s`` (length counts[s] + 1)."""
         return self.col_cuts[s, :int(self.counts[s]) + 1]
 
+    def _live_col_cuts(self) -> np.ndarray:
+        """(P, m_max+1) cuts with masked entries pinned at n2, so vectorized
+        searches see each stripe as monotone with empty trailing intervals."""
+        idx = np.arange(self.col_cuts.shape[1])
+        live = idx[None, :] <= np.asarray(self.counts)[:, None]
+        return np.where(live, self.col_cuts, self.shape[1])
+
     def owner_map(self) -> np.ndarray:
-        """(n1, n2) int32 map: cell -> global processor index."""
-        own = np.empty(self.shape, dtype=np.int32)
-        base = 0
-        for s in range(len(self.counts)):
-            r0, r1 = int(self.row_cuts[s]), int(self.row_cuts[s + 1])
-            cc = self.stripe_col_cuts(s)
-            band = np.repeat(base + np.arange(len(cc) - 1, dtype=np.int32),
-                             np.diff(cc))
-            own[r0:r1, :] = band[None, :]
-            base += len(cc) - 1
+        """(n1, n2) int32 map: cell -> global processor index.
+
+        Fully vectorized (no per-stripe Python loop) and memoized — the
+        runtime diffs owner maps every step, and consecutive diffs reuse
+        both sides.  Matches the per-stripe ``np.repeat`` construction
+        bit-for-bit (property-tested).
+        """
+        cached = self.__dict__.get("_owner_map")
+        if cached is not None:
+            return cached
+        counts = np.asarray(self.counts, dtype=np.int64)
+        base = np.concatenate([[0], np.cumsum(counts[:-1])])
+        cc = self._live_col_cuts()
+        cols = np.arange(self.shape[1])
+        # interval of column j in stripe s = #cuts (past the leading 0) <= j
+        col_owner = (cc[:, 1:, None] <= cols[None, None, :]).sum(axis=1)
+        stripe_of_row = np.repeat(np.arange(len(counts)),
+                                  np.diff(self.row_cuts))
+        own = (base[:, None] + col_owner).astype(np.int32)[stripe_of_row]
+        object.__setattr__(self, "_owner_map", own)
         return own
 
     def loads(self, gamma: np.ndarray) -> np.ndarray:
-        """(m,) per-processor loads on an arbitrary frame's host Gamma."""
-        out = np.empty(self.m, dtype=np.asarray(gamma).dtype)
-        base = 0
-        for s in range(len(self.counts)):
-            r0, r1 = int(self.row_cuts[s]), int(self.row_cuts[s + 1])
-            cc = self.stripe_col_cuts(s)
-            band = gamma[r1, cc] - gamma[r0, cc]
-            out[base:base + len(cc) - 1] = np.diff(band)
-            base += len(cc) - 1
-        return out
+        """(m,) per-processor loads on an arbitrary frame's host Gamma.
+
+        Vectorized: one fancy-indexed gather over all stripes at once;
+        masked intervals (pinned at n2) difference to zero and are
+        dropped, preserving the row-major positional order.
+        """
+        g = np.asarray(gamma)
+        cc = self._live_col_cuts()
+        r0 = np.asarray(self.row_cuts[:-1], dtype=np.intp)[:, None]
+        r1 = np.asarray(self.row_cuts[1:], dtype=np.intp)[:, None]
+        band = g[r1, cc] - g[r0, cc]              # (P, m_max+1)
+        seg = np.diff(band, axis=1)               # (P, m_max)
+        live = np.arange(1, cc.shape[1])[None, :] \
+            <= np.asarray(self.counts)[:, None]
+        return seg[live]
 
     def max_load(self, gamma: np.ndarray) -> float:
         return float(self.loads(gamma).max(initial=0))
@@ -146,7 +177,12 @@ class Plan:
 
 
 def unstack_plans(batched, shape: tuple[int, int]) -> list[Plan]:
-    """Split a ``plan_stream``/``jag_m_heur_batch`` pytree into T Plans."""
+    """Split a ``plan_stream``/``jag_m_heur_batch`` pytree into T Plans.
+
+    One host gather per array for the whole batch (np.asarray on a sharded
+    result is the planner's cut collect / all-gather); the per-frame step
+    is pure zero-copy numpy slicing.
+    """
     row_cuts, counts, col_cuts, _ = batched
     rc = np.asarray(row_cuts)
     ct = np.asarray(counts)

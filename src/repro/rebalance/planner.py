@@ -1,0 +1,253 @@
+"""Mesh-sharded stream planner: the batched pipeline as composable stages.
+
+``batch_device.plan_stream`` (PR 3) fused SAT build + ``jag_m_heur_device``
+over a ``(T, n1, n2)`` frame stream under one jit — on *one* device.  This
+module is the distribution layer above it: the same chain, split into
+named stages
+
+    frame ingest -> SAT build -> partition -> cut collect
+
+and executed either
+
+- on one device (the reference path — today's vmap, still exactly
+  ``batch_device.plan_stream``), or
+- sharded over the data-parallel axis of a mesh
+  (``dist.ctx.planner_mesh``) via ``shard_map``: each device owns a
+  contiguous time slice, frames and Gammas stay device-local, and only
+  the O(T * m) cut vectors are gathered.
+
+Per-frame computations never cross the time axis, so the sharded plans
+are **bit-identical** to the single-device reference on 1-, 2- and
+8-device meshes (regression-tested, including T not divisible by the
+device count — the ragged tail is zero-padded on device and trimmed from
+the result).
+
+``iter_plan_slices`` / ``plan_iter`` expose the stream lazily: every
+slice is dispatched up front (jax dispatch is asynchronous), so a policy
+loop consuming slice ``i`` overlaps with the devices still planning
+slices ``i+1..`` instead of blocking on the full stream.
+
+The graded replan decision (:func:`repro.rebalance.policy.replan_mode`)
+is re-exported here: planning and deciding-when-to-adopt are the two
+halves of the planner API that ``rebalance.runtime``,
+``dist.cp_balance`` and ``serve.batcher`` consume.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device
+from repro.kernels.sat import ops as sat_ops
+from repro.rebalance.policy import replan_mode
+
+__all__ = ["ingest_stage", "sat_stage", "partition_stage", "plan_frames",
+           "plan_stream", "iter_plan_slices", "plan_iter", "plan_host",
+           "resolve_mesh", "replan_mode"]
+
+# How many slices the lazy iterator aims for when none is requested: deep
+# enough that the policy loop starts after ~1/4 of the stream is planned,
+# shallow enough that per-slice dispatch overhead stays negligible.
+_DEFAULT_SLICES = 4
+
+
+# ---------------------------------------------------------------------------
+# stages (pure jnp, unjitted — composed under exactly one jit boundary)
+
+
+def ingest_stage(frames: jnp.ndarray, *,
+                 gamma_dtype=jnp.float32) -> jnp.ndarray:
+    """Frame ingest: cast to the accumulator dtype *before* the SAT scan.
+
+    Accumulation happens in ``gamma_dtype`` (f32 saturates above 2**24
+    total load; pass ``jnp.float64`` with x64 enabled for large integer
+    loads).
+    """
+    return frames.astype(gamma_dtype)
+
+
+def sat_stage(frames: jnp.ndarray, *, use_pallas: bool = False,
+              interpret: bool = True) -> jnp.ndarray:
+    """SAT build: (T, n1, n2) frames -> (T, n1+1, n2+1) Gammas.
+
+    Both backends take the batch natively — the Pallas kernel's leading
+    batch grid axis (so the blocked path lowers under the sharded trace
+    instead of falling back to the jnp oracle) and the oracle's
+    trailing-axes cumsum.  ``use_pallas=False`` is the right default on
+    CPU; flip it on real TPU.
+    """
+    return sat_ops.gamma_impl(frames, use_pallas=use_pallas,
+                              interpret=interpret)
+
+
+def partition_stage(gammas: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                    rounds: int = 8, gamma_dtype=None):
+    """Partition: vmapped JAG-M-HEUR over the (T, n1+1, n2+1) Gamma batch.
+
+    Returns (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, m_max+1),
+    Lmax (T,)).
+    """
+    fn = functools.partial(device.jag_m_heur_device_impl, P=P, m=m, k=k,
+                           rounds=rounds, gamma_dtype=gamma_dtype)
+    return jax.vmap(fn)(gammas)
+
+
+def plan_frames(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
+                rounds: int = 8, gamma_dtype=jnp.float32,
+                use_pallas: bool = False, interpret: bool = True):
+    """The full unjitted chain: ingest -> SAT -> partition.
+
+    Every intermediate (frames, Gammas) stays on the executing device;
+    the returned pytree is the O(T * m) cut vectors only — the "cut
+    collect" stage is whoever fetches them (the host, or the all-gather
+    implicit in reading a sharded result).
+    """
+    g = sat_stage(ingest_stage(frames, gamma_dtype=gamma_dtype),
+                  use_pallas=use_pallas, interpret=interpret)
+    return partition_stage(g, P=P, m=m, k=k, rounds=rounds,
+                           gamma_dtype=gamma_dtype)
+
+
+# ---------------------------------------------------------------------------
+# mesh execution
+
+
+def resolve_mesh(mesh=None, devices: int | None = None):
+    """Planner-mesh resolution for consumer-facing ``devices=N`` knobs.
+
+    An explicit mesh wins; ``devices=N`` builds the 1-D
+    ``dist.ctx.planner_mesh`` over the first N host devices; ``N=1`` /
+    nothing means the single-device reference path (``None``).
+    """
+    if mesh is not None:
+        return mesh
+    if devices is None or devices <= 1:
+        return None
+    from repro.dist import ctx
+    return ctx.planner_mesh(devices)
+
+
+def _dp_spec(mesh):
+    """(PartitionSpec over the DP axes, total DP size) for ``mesh``."""
+    from jax.sharding import PartitionSpec
+    from repro.dist import ctx
+    axes = ctx.planner_axes(mesh)
+    sizes = ctx.mesh_sizes(mesh)
+    spec = PartitionSpec(axes if len(axes) > 1 else axes[0])
+    return spec, int(math.prod(sizes[a] for a in axes))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_plan_fn(mesh, P, m, k, rounds, gamma_dtype, use_pallas,
+                     interpret):
+    """jit(shard_map(chain)) for one (mesh, signature) — cached so repeat
+    calls reuse the compiled executable."""
+    from jax.experimental.shard_map import shard_map
+    spec, _ = _dp_spec(mesh)
+    body = functools.partial(plan_frames, P=P, m=m, k=k, rounds=rounds,
+                             gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+                             interpret=interpret)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec))
+
+
+def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
+                rounds: int = 8, gamma_dtype=jnp.float32,
+                use_pallas: bool = False, interpret: bool = True):
+    """SAT + partitioner for a whole (T, n1, n2) stream.
+
+    ``mesh=None`` is the single-device reference (identical to
+    ``batch_device.plan_stream``); with a mesh, the time axis is sharded
+    over its data-parallel axes — each device plans its own contiguous
+    slice and only the cut vectors leave it.  Cuts are bit-identical
+    across mesh sizes.  When T does not divide the DP size, the stream is
+    zero-padded on device and the padding trimmed from the result.
+    """
+    from repro.rebalance import batch_device
+    frames = jnp.asarray(frames)
+    if mesh is None:
+        return batch_device.plan_stream(
+            frames, P=P, m=m, k=k, rounds=rounds, gamma_dtype=gamma_dtype,
+            use_pallas=use_pallas, interpret=interpret)
+    from jax.sharding import NamedSharding
+    spec, D = _dp_spec(mesh)
+    T = frames.shape[0]
+    Tpad = -(-T // D) * D
+    if Tpad != T:
+        frames = jnp.concatenate(
+            [frames, jnp.zeros((Tpad - T,) + frames.shape[1:],
+                               frames.dtype)])
+    fr = jax.device_put(frames, NamedSharding(mesh, spec))
+    out = _sharded_plan_fn(mesh, P, m, k, rounds, jnp.dtype(gamma_dtype),
+                           use_pallas, interpret)(fr)
+    if Tpad != T:
+        out = jax.tree_util.tree_map(lambda x: x[:T], out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lazy per-slice consumption
+
+
+def iter_plan_slices(frames, *, P: int, m: int, mesh=None,
+                     slice_size: int | None = None, k: int = 8,
+                     rounds: int = 8, gamma_dtype=jnp.float32,
+                     use_pallas: bool = False, interpret: bool = True):
+    """Yield ``(t0, t1, batched_slice)`` over the stream, planned lazily.
+
+    All slices are dispatched before the first yield — jax dispatch is
+    asynchronous, so a consumer working through slice ``i``'s cuts
+    overlaps with the device(s) still planning slices ``i+1..``.  Every
+    full slice has ``slice_size`` frames (rounded up to a DP-size
+    multiple on a mesh) and shares one compiled program; a ragged tail
+    is a second, smaller shape and compiles once more (on the mesh path
+    it is first padded up to the next DP-size multiple, which only
+    coincides with ``slice_size`` when the tail is within D of it).
+    """
+    frames = jnp.asarray(frames)
+    T = frames.shape[0]
+    D = 1 if mesh is None else _dp_spec(mesh)[1]
+    if slice_size is None:
+        slice_size = max(D, -(-T // _DEFAULT_SLICES))
+    slice_size = -(-slice_size // D) * D
+    pending = []
+    for t0 in range(0, T, slice_size):
+        t1 = min(t0 + slice_size, T)
+        pending.append((t0, t1, plan_stream(
+            frames[t0:t1], P=P, m=m, mesh=mesh, k=k, rounds=rounds,
+            gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+            interpret=interpret)))
+    yield from pending
+
+
+def plan_iter(frames, *, P: int, m: int, mesh=None,
+              slice_size: int | None = None, k: int = 8, rounds: int = 8,
+              gamma_dtype=jnp.float32, use_pallas: bool = False,
+              interpret: bool = True):
+    """Per-frame :class:`~repro.rebalance.batch_device.Plan` iterator.
+
+    The lazy flattening of :func:`iter_plan_slices` — what the runtime's
+    policy loop consumes in lockstep with the frames.
+    """
+    from repro.rebalance import batch_device
+    shape = tuple(frames.shape[1:])
+    for _, _, batched in iter_plan_slices(
+            frames, P=P, m=m, mesh=mesh, slice_size=slice_size, k=k,
+            rounds=rounds, gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+            interpret=interpret):
+        yield from batch_device.unstack_plans(batched, shape)
+
+
+def plan_host(frames, *, P: int, m: int, mesh=None, k: int = 8,
+              rounds: int = 8, gamma_dtype=jnp.float32,
+              use_pallas: bool = False, interpret: bool = True):
+    """Whole-stream planning to host Plans (one dispatch, no slicing)."""
+    from repro.rebalance import batch_device
+    batched = plan_stream(frames, P=P, m=m, mesh=mesh, k=k, rounds=rounds,
+                          gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+                          interpret=interpret)
+    return batch_device.unstack_plans(batched, tuple(frames.shape[1:]))

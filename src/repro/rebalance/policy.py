@@ -22,7 +22,23 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["StepState", "NeverRebalance", "AlwaysRebalance", "EveryK",
-           "HysteresisPolicy", "TwoPhaseHysteresis"]
+           "HysteresisPolicy", "TwoPhaseHysteresis", "replan_mode"]
+
+
+def replan_mode(policy, state: "StepState") -> str:
+    """Grade one replan decision: ``'keep'`` | ``'fast'`` | ``'slow'``.
+
+    The planner-API decision point every graded consumer shares — the 2D
+    stream runtime, ``dist.cp_balance.replan_contiguous`` and
+    ``serve.batcher.replan`` all route through here instead of sniffing
+    policy capabilities themselves.  Policies exposing ``mode()``
+    (:class:`TwoPhaseHysteresis`) grade their effort; a plain
+    ``decide()`` policy maps onto fast-or-keep — it adopts the cheap
+    candidate whenever it triggers and never escalates.
+    """
+    if hasattr(policy, "mode"):
+        return policy.mode(state)
+    return "fast" if policy.decide(state) else "keep"
 
 
 @dataclasses.dataclass(frozen=True)

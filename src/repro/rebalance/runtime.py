@@ -3,10 +3,15 @@
 The execution model (paper Section 6): a frame costs its bottleneck load
 (the step takes as long as the busiest processor), and adopting a new plan
 costs ``replan_overhead + alpha * migration_volume``.  Candidate plans for
-*every* frame are produced upfront by one ``batch_device.plan_stream``
-call — a single compiled vmap over the whole stream, the load matrices
-never leaving the device — so the policy loop on the host only touches
-O(m) cut vectors and the owner maps it diffs.
+*every* frame come from the mesh-aware planner
+(``repro.rebalance.planner``) — either one fused ``plan_stream`` call (a
+single compiled vmap over the whole stream, optionally sharded over a
+device mesh so each device plans its own time slice) or, by default, the
+planner's **lazy per-slice iterator**: slices are all dispatched up front
+and the policy loop consumes slice 0's cuts while the devices are still
+planning the rest, instead of blocking on the full stream.  Either way
+the load matrices never leave the device(s); the host only touches O(m)
+cut vectors and the owner maps it diffs.
 
 ``compare_policies`` runs several policies over the same precomputed
 candidate plans, which is how the never/always/hysteresis trade-off
@@ -21,7 +26,7 @@ import numpy as np
 
 from repro.core import prefix
 
-from . import batch_device, migrate
+from . import batch_device, migrate, planner
 from .policy import StepState
 
 __all__ = ["StepRecord", "RunResult", "plan_stream_host", "run_stream",
@@ -74,38 +79,60 @@ class RunResult:
 
 
 def plan_stream_host(frames: np.ndarray, *, P: int, m: int, k: int = 8,
-                     rounds: int = 8,
-                     gamma_dtype=jnp.float32) -> list[batch_device.Plan]:
-    """Candidate plan per frame via one batched device call."""
-    batched = batch_device.plan_stream(jnp.asarray(frames), P=P, m=m, k=k,
-                                       rounds=rounds, gamma_dtype=gamma_dtype)
-    return batch_device.unstack_plans(batched, frames.shape[1:])
+                     rounds: int = 8, gamma_dtype=jnp.float32, mesh=None,
+                     devices: int | None = None) -> list[batch_device.Plan]:
+    """Candidate plan per frame via one (possibly sharded) planner call."""
+    return planner.plan_host(
+        np.asarray(frames), P=P, m=m, k=k, rounds=rounds,
+        gamma_dtype=gamma_dtype, mesh=planner.resolve_mesh(mesh, devices))
 
 
 def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                alpha: float = 1.0, replan_overhead: float = 0.0,
-               weight: str = "load", plans: list[batch_device.Plan] | None
-               = None, gammas: list[np.ndarray] | None = None, k: int = 8,
-               rounds: int = 8) -> RunResult:
+               weight: str = "load", plans=None,
+               gammas: list[np.ndarray] | None = None, k: int = 8,
+               rounds: int = 8, mesh=None,
+               devices: int | None = None) -> RunResult:
     """Drive one policy over a (T, n1, n2) stream.
 
     weight: "load" charges migration by the moved cells' current load
     (state size tracks load in PIC-like codes); "cells" charges per cell.
     Step 0's initial placement is free — every policy pays it equally.
-    ``gammas`` are the per-frame host prefix tables used for exact cost
-    accounting; pass them (with ``plans``) when replaying the same stream
-    under several policies — see :func:`compare_policies`.
+
+    ``plans`` may be a list or any iterable of per-frame Plans; when
+    omitted, the planner's lazy slice iterator supplies them (sharded
+    over ``mesh``/``devices`` when given), so the policy loop overlaps
+    with later slices' planning.  ``gammas`` are the per-frame host
+    prefix tables used for exact cost accounting; pass them (with
+    ``plans``) when replaying the same stream under several policies —
+    see :func:`compare_policies`.  When omitted they are built per step,
+    keeping the loop lazy.
     """
     if weight not in ("load", "cells"):
         raise ValueError(f"weight must be 'load' or 'cells', got {weight!r}")
     frames = np.asarray(frames)
     if plans is None:
-        plans = plan_stream_host(frames, P=P, m=m, k=k, rounds=rounds)
-    if gammas is None:
-        gammas = [prefix.prefix_sum_2d(f) for f in frames]
+        plans = planner.plan_iter(frames, P=P, m=m, k=k, rounds=rounds,
+                                  mesh=planner.resolve_mesh(mesh, devices))
+    plan_it = iter(plans)
+
+    def next_plan(t: int) -> batch_device.Plan:
+        # a bare StopIteration would read as normal termination to any
+        # enclosing generator — surface short plan streams loudly instead
+        try:
+            return next(plan_it)
+        except StopIteration:
+            raise ValueError(f"plans ran out at step {t}: run_stream needs "
+                             f"one candidate plan per frame "
+                             f"({len(frames)} frames)") from None
+
+    def frame_gamma(t: int) -> np.ndarray:
+        return gammas[t] if gammas is not None \
+            else prefix.prefix_sum_2d(frames[t])
+
     records: list[StepRecord] = []
-    active = plans[0]
-    g0 = gammas[0]
+    active = next_plan(0)
+    g0 = frame_gamma(0)
     achieved = active.max_load(g0)
     total_at_replan = float(g0[-1, -1])
     steps_since = 0
@@ -113,7 +140,8 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
     records.append(StepRecord(0, achieved, total_at_replan / m, True,
                               0.0, 0.0))
     for t in range(1, len(frames)):
-        g = gammas[t]
+        candidate = next_plan(t)
+        g = frame_gamma(t)
         total = float(g[-1, -1])
         cur_ml = active.max_load(g)
         steps_since += 1
@@ -125,9 +153,9 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                           replan_overhead=replan_overhead)
         if policy.decide(state):
             w = frames[t] if weight == "load" else None
-            vol = migrate.migration_volume(active, plans[t], weights=w)
+            vol = migrate.migration_volume(active, candidate, weights=w)
             cost = replan_overhead + alpha * vol
-            active = plans[t]
+            active = candidate
             achieved = active.max_load(g)
             total_at_replan = total
             steps_since = 0
@@ -142,12 +170,22 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
 
 def compare_policies(frames: np.ndarray, policies: dict, *, P: int, m: int,
                      alpha: float = 1.0, replan_overhead: float = 0.0,
-                     weight: str = "load", k: int = 8,
-                     rounds: int = 8) -> dict[str, RunResult]:
-    """Run several policies over shared precomputed plans and gammas."""
+                     weight: str = "load", k: int = 8, rounds: int = 8,
+                     mesh=None,
+                     devices: int | None = None) -> dict[str, RunResult]:
+    """Run several policies over shared precomputed plans and gammas.
+
+    The plans are materialized once (replayed per policy), but still
+    arrive through the lazy slice iterator: the first policy's gamma
+    precompute overlaps with the tail slices' planning.
+    """
     frames = np.asarray(frames)
-    plans = plan_stream_host(frames, P=P, m=m, k=k, rounds=rounds)
+    mesh = planner.resolve_mesh(mesh, devices)
+    plan_it = planner.plan_iter(frames, P=P, m=m, k=k, rounds=rounds,
+                                mesh=mesh)
+    first = next(plan_it, None)  # dispatches every slice (async) up front
     gammas = [prefix.prefix_sum_2d(f) for f in frames]
+    plans = ([] if first is None else [first]) + list(plan_it)
     return {name: run_stream(frames, pol, P=P, m=m, alpha=alpha,
                              replan_overhead=replan_overhead, weight=weight,
                              plans=plans, gammas=gammas)

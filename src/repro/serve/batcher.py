@@ -59,8 +59,25 @@ def plan(requests: list[Request], n_replicas: int, *,
     return out
 
 
+def _greedy_extend(assignments: list[Assignment],
+                   new_requests: list[Request]) -> list[Assignment]:
+    """Keep-path plan: queued requests stay put (zero migration); arrivals
+    go LPT-greedy onto the least-loaded replica."""
+    out = [Assignment(a.replica, list(a.requests)) for a in assignments]
+    loads = [a.load for a in out]
+    for r in sorted(new_requests, key=lambda r: r.prompt_tokens,
+                    reverse=True):
+        i = min(range(len(out)), key=loads.__getitem__)
+        out[i].requests.append(r)
+        loads[i] += r.prompt_tokens
+    return out
+
+
 def replan(assignments: list[Assignment], new_requests: list[Request], *,
-           algo: str = "optimal", sort: bool = True) -> list[Assignment]:
+           algo: str = "optimal", sort: bool = True, policy=None,
+           alpha: float = 0.0, replan_overhead: float = 0.0,
+           steps_since_replan: int = 1,
+           last_migration_volume: float = 0.0):
     """Re-partition queued + newly arrived requests, warm-starting from the
     prior plan.
 
@@ -70,14 +87,52 @@ def replan(assignments: list[Assignment], new_requests: list[Request], *,
     load drift the arrivals introduced instead of the full DirectCut
     interval.  Equivalent cuts to ``plan()`` from scratch — the warm start
     changes probe count, never the optimum.
+
+    Always returns ``(assignments, mode)`` with ``mode`` in
+    ``{'keep', 'fast', 'slow'}``.  ``policy=None`` (default)
+    re-partitions unconditionally with ``algo`` (mode reports the effort
+    spent: ``'slow'`` for the optimal bisection, ``'fast'`` for the
+    DirectCut-family paths).  With a policy the replan is *graded*
+    through the planner API's shared decision point
+    (:func:`repro.rebalance.policy.replan_mode`), mirroring
+    ``dist.cp_balance.replan_contiguous``: the cheap keep-path appends
+    arrivals LPT-greedy to the least-loaded replicas (queued requests
+    never change replica — no KV migration); ``'fast'`` buys the
+    DirectCut re-partition (always DirectCut — it doubles as the
+    predictor of the fresh-plan bottleneck, so it must stay the cheap
+    path); ``'slow'`` escalates to the caller's ``algo``, warm-seeded by
+    the fast candidate's bottleneck when it is the optimal bisection.
     """
     if not assignments:
         raise ValueError("replan needs at least one existing assignment "
                          "(the replica count comes from the prior plan)")
     reqs = [r for a in assignments for r in a.requests] + list(new_requests)
     warm = max(a.load for a in assignments)
-    return plan(reqs, len(assignments), algo=algo, sort=sort,
-                warm=float(warm) if warm > 0 else None)
+    if policy is None:
+        return plan(reqs, len(assignments), algo=algo, sort=sort,
+                    warm=float(warm) if warm > 0 else None), \
+            "slow" if algo == "optimal" else "fast"
+
+    from repro.rebalance.policy import StepState, replan_mode
+    R = len(assignments)
+    total = float(sum(r.prompt_tokens for r in reqs))
+    ext = _greedy_extend(assignments, new_requests)
+    ext_load = float(max(a.load for a in ext))
+    fast = plan(reqs, R, algo="direct", sort=sort)
+    fast_load = float(max(a.load for a in fast))
+    state = StepState(step=steps_since_replan, max_load=ext_load,
+                      ideal=total / R, total_load=total,
+                      achieved_at_replan=fast_load, total_at_replan=total,
+                      steps_since_replan=steps_since_replan,
+                      last_migration_volume=last_migration_volume,
+                      alpha=alpha, replan_overhead=replan_overhead)
+    mode = replan_mode(policy, state)
+    if mode == "keep":
+        return ext, mode
+    if mode == "slow":
+        warm = fast_load if algo == "optimal" and fast_load > 0 else None
+        return plan(reqs, R, algo=algo, sort=sort, warm=warm), mode
+    return fast, mode
 
 
 def imbalance(assignments: list[Assignment]) -> float:

@@ -60,6 +60,82 @@ def test_single_compilation_for_all_frames():
     assert batch_device.plan_stream._cache_size() == before + 1
 
 
+def test_plan_stream_one_jit_boundary():
+    """Regression: plan_stream composes the *unjitted* stage bodies, so one
+    (shape, P, m) signature triggers exactly one XLA compilation and never
+    routes through the standalone jitted stage wrappers' caches."""
+    import logging
+
+    class _CompileCounter(logging.Handler):
+        def __init__(self):
+            super().__init__()
+            self.n = 0
+
+        def emit(self, record):
+            if "Finished XLA compilation" in record.getMessage():
+                self.n += 1
+
+    frames = jnp.asarray(stream.drifting_hotspot(3, 17, 13, seed=6))
+    stage_caches = (batch_device.gamma_batch._cache_size(),
+                    batch_device.jag_m_heur_batch._cache_size())
+    counter = _CompileCounter()
+    logger = logging.getLogger("jax._src.dispatch")
+    logger.addHandler(counter)
+    try:
+        with jax.log_compiles():
+            batch_device.plan_stream(frames, P=2, m=5)
+            first = counter.n
+            batch_device.plan_stream(frames, P=2, m=5)
+            second = counter.n - first
+    finally:
+        logger.removeHandler(counter)
+    assert first == 1, f"expected exactly one XLA compilation, got {first}"
+    assert second == 0, f"cached signature recompiled {second}x"
+    assert (batch_device.gamma_batch._cache_size(),
+            batch_device.jag_m_heur_batch._cache_size()) == stage_caches
+
+
+def test_owner_map_vectorized_matches_loop(rng):
+    """Property: the vectorized owner map / loads equal the per-stripe
+    reference construction on random plans of random geometry."""
+    def owner_map_loop(p):
+        own = np.empty(p.shape, dtype=np.int32)
+        base = 0
+        for s in range(len(p.counts)):
+            r0, r1 = int(p.row_cuts[s]), int(p.row_cuts[s + 1])
+            cc = p.stripe_col_cuts(s)
+            band = np.repeat(base + np.arange(len(cc) - 1, dtype=np.int32),
+                             np.diff(cc))
+            own[r0:r1, :] = band[None, :]
+            base += len(cc) - 1
+        return own
+
+    def loads_loop(p, gamma):
+        out = np.empty(p.m, dtype=np.asarray(gamma).dtype)
+        base = 0
+        for s in range(len(p.counts)):
+            r0, r1 = int(p.row_cuts[s]), int(p.row_cuts[s + 1])
+            cc = p.stripe_col_cuts(s)
+            band = gamma[r1, cc] - gamma[r0, cc]
+            out[base:base + len(cc) - 1] = np.diff(band)
+            base += len(cc) - 1
+        return out
+
+    for _ in range(8):
+        n1 = int(rng.integers(8, 40))
+        n2 = int(rng.integers(8, 40))
+        T = int(rng.integers(1, 4))
+        Pp = int(rng.integers(2, 6))
+        mm = int(rng.integers(Pp + 1, Pp + 9))
+        frames = rng.integers(1, 500, (T, n1, n2)).astype(np.int64)
+        batched = batch_device.plan_stream(jnp.asarray(frames), P=Pp, m=mm)
+        for t, p in enumerate(batch_device.unstack_plans(batched,
+                                                         (n1, n2))):
+            np.testing.assert_array_equal(p.owner_map(), owner_map_loop(p))
+            g = prefix.prefix_sum_2d(frames[t])
+            np.testing.assert_array_equal(p.loads(g), loads_loop(p, g))
+
+
 def test_every_frame_covers_grid(rng):
     """Property: every frame's cuts cover [0, n) — valid disjoint cover."""
     for name in ("drifting-hotspot", "refinement-bursts"):
@@ -188,11 +264,73 @@ def test_batcher_replan_matches_scratch(rng):
         assignments = batcher.plan(reqs, 4)
         new = [batcher.Request(1000 + i, int(rng.integers(1, 3000)))
                for i in range(int(rng.integers(0, 20)))]
-        got = batcher.replan(assignments, new)
+        got, mode = batcher.replan(assignments, new)
+        assert mode == "slow"  # unconditional optimal re-partition
         ref = batcher.plan(reqs + new, 4)
         assert [a.load for a in got] == [a.load for a in ref]
         assert sorted(r.rid for a in got for r in a.requests) == \
             sorted(r.rid for r in reqs + new)
+
+
+def test_batcher_graded_replan_keeps_on_no_drift():
+    """With no arrivals the keep-path IS the prior plan (excess exactly 0),
+    so a graded replan never migrates queued requests."""
+    reqs = [batcher.Request(i, 100 + 7 * i) for i in range(24)]
+    assignments = batcher.plan(reqs, 4)
+    got, mode = batcher.replan(assignments, [],
+                               policy=policy.TwoPhaseHysteresis())
+    assert mode == "keep"
+    assert [a.load for a in got] == [a.load for a in assignments]
+    assert sorted(r.rid for a in got for r in a.requests) == \
+        sorted(r.rid for r in reqs)
+
+
+def test_batcher_graded_replan_escalates_on_heavy_drift():
+    """Unevenly drained queues (one replica still holds most of the work)
+    push the keep-path far past the slow band; the escalated replan
+    reaches the optimal bottleneck and every request keeps one home."""
+    hot = batcher.Assignment(0, [batcher.Request(i, 1000)
+                                 for i in range(10)])
+    cold = batcher.Assignment(1, [batcher.Request(100, 100),
+                                  batcher.Request(101, 100)])
+    got, mode = batcher.replan([hot, cold], [],
+                               policy=policy.TwoPhaseHysteresis(
+                                   horizon=8, band=0.02, slow_band=0.10))
+    assert mode == "slow"
+    all_reqs = hot.requests + cold.requests
+    ref = batcher.plan(all_reqs, 2)
+    assert max(a.load for a in got) == max(a.load for a in ref)
+    assert max(a.load for a in got) < hot.load
+    assert sorted(r.rid for a in got for r in a.requests) == \
+        sorted(r.rid for r in all_reqs)
+
+
+def test_batcher_plain_policy_never_escalates():
+    """A decide()-only policy grades through replan_mode as fast-or-keep."""
+    reqs = [batcher.Request(i, 100) for i in range(12)]
+    assignments = batcher.plan(reqs, 3)
+    new = [batcher.Request(50 + i, 5000) for i in range(3)]
+    got, mode = batcher.replan(assignments, new,
+                               policy=policy.HysteresisPolicy(band=0.0))
+    assert mode in ("keep", "fast")
+    assert sorted(r.rid for a in got for r in a.requests) == \
+        sorted(r.rid for r in reqs + new)
+
+
+def test_replan_mode_grading():
+    st = dict(step=1, total_load=1000.0, achieved_at_replan=100.0,
+              total_at_replan=1000.0, steps_since_replan=1,
+              last_migration_volume=0.0, alpha=0.0, replan_overhead=0.0)
+    calm = policy.StepState(max_load=100.0, ideal=100.0, **st)
+    hot = policy.StepState(max_load=130.0, ideal=100.0, **st)
+    blazing = policy.StepState(max_load=200.0, ideal=100.0, **st)
+    two = policy.TwoPhaseHysteresis(band=0.02, slow_band=0.5)
+    assert policy.replan_mode(two, calm) == "keep"
+    assert policy.replan_mode(two, hot) == "fast"
+    assert policy.replan_mode(two, blazing) == "slow"
+    plain = policy.HysteresisPolicy(band=0.02)
+    assert policy.replan_mode(plain, calm) == "keep"
+    assert policy.replan_mode(plain, blazing) == "fast"
 
 
 def test_cp_replan_static_keeps_plan():
