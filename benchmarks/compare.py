@@ -19,6 +19,11 @@ itself — the tier-1 equivalence tests, not wall-clock, guard that case.
 Bottlenecks are exact engine outputs and machine-independent, so a
 changed ``bottleneck`` for a matched record always fails — that is a
 correctness regression wearing a perf trenchcoat.
+
+A baseline record absent from the candidate run also fails (a bench that
+silently stops emitting is a gate hole, not a retirement) unless its name
+matches an ``--allow-missing`` substring; candidate records without a
+baseline are listed as "new (ungated)" and pass.
 """
 from __future__ import annotations
 
@@ -52,6 +57,11 @@ def main() -> None:
                     help="fail if normalized us_per_call ratio exceeds this")
     ap.add_argument("--absolute", action="store_true",
                     help="skip median normalization (same-machine compare)")
+    ap.add_argument("--allow-missing", action="append", default=[],
+                    metavar="SUBSTRING",
+                    help="baseline records matching this substring may be "
+                         "absent from the fresh run (repeatable; e.g. a "
+                         "bench leg that only runs multi-device)")
     args = ap.parse_args()
     if len(args.files) < 2:
         ap.error("need at least one fresh run and a baseline")
@@ -66,7 +76,16 @@ def main() -> None:
     failures = []
     for name in sorted(base):
         if name not in new:
-            print(f"~ {name}: missing from new run (retired?)")
+            if any(tok in name for tok in args.allow_missing):
+                print(f"~ {name}: missing from new run (allowed by "
+                      f"--allow-missing)")
+            else:
+                print(f"! {name}: MISSING from candidate run")
+                failures.append(
+                    f"baseline record {name!r} missing from candidate run "
+                    f"(a bench silently stopped emitting it; pass "
+                    f"--allow-missing {name!r} if retirement is "
+                    f"intentional)")
             continue
         b, n = base[name], new[name]
         rel = ratios[name] / norm
@@ -81,7 +100,8 @@ def main() -> None:
             failures.append(f"{name} bottleneck changed "
                             f"{b['bottleneck']} -> {n['bottleneck']}")
     for name in sorted(set(new) - set(base)):
-        print(f"+ {name}: new record ({new[name]['us_per_call']:.1f} us)")
+        print(f"+ {name}: new (ungated) "
+              f"({new[name]['us_per_call']:.1f} us)")
     if failures:
         print(f"# PERF GATE FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

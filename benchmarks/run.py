@@ -23,6 +23,7 @@ BENCHES = [
     ("bench_partitioner", "bench_partitioner"),
     ("bench_hybrid", "bench_hybrid"),
     ("bench_rebalance", "bench_rebalance"),
+    ("bench_faults", "bench_faults"),
     ("moe_placement", "bench_moe_placement"),
     ("cp_balance", "bench_cp_balance"),
     ("kernels", "bench_kernels"),

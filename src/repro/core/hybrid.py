@@ -322,6 +322,53 @@ def _refine(root: SubgridView, parts: list[Rect], qs: list[int],
 # public pipeline
 
 
+def _hybrid_speeds(gamma: np.ndarray, m: int, P: int | None,
+                   speeds: np.ndarray) -> Partition:
+    """Capacity-aware HYBRID (speeds pre-normalized, genuinely hetero).
+
+    Positions chunk into P contiguous runs of ~equal speed mass; phase 1
+    runs capacity-aware JAG-M-HEUR on the aggregate chunk speeds (part
+    ``s`` of the phase-1 partition is positionally chunk ``s``), phase 2
+    re-partitions each part with capacity-aware JAG-M-HEUR-PROBE on its
+    own chunk slice.  The expected-LI scan and the fast/slow refinement
+    loop are skipped — both rank parts by *raw* load, which is the wrong
+    objective under heterogeneous capacity.  Dead chunks (no positive
+    speed) and empty parts emit zero-width rects so the global rect order
+    stays positional.
+    """
+    n1, n2 = gamma.shape[0] - 1, gamma.shape[1] - 1
+    if P is None:
+        P = max(int(round(np.sqrt(m))), 2)
+    P = max(min(P, m, int((speeds > 0).sum())), 1)
+    chunk = jagged._speed_chunks(speeds, P)
+    gsum = np.add.reduceat(speeds, chunk[:-1])
+    part1 = jagged.jag_m_heur(gamma, P, speeds=gsum, orient="hor")
+    rects: list[Rect] = []
+    for s, r in enumerate(part1.rects):
+        lo_pos, hi_pos = int(chunk[s]), int(chunk[s + 1])
+        sl = speeds[lo_pos:hi_pos]
+        q = hi_pos - lo_pos
+        if r.area == 0 or not (sl > 0).any():
+            # dead/empty chunk: keep r covered by its first position (the
+            # part carries zero load here — phase 1 only hands a dead
+            # chunk nonzero area when that area is zero-load), pad the
+            # rest with zero-width rects to keep positions aligned.
+            rects.append(r)
+            rects.extend(Rect(r.r0, r.r0, r.c0, r.c0)
+                         for _ in range(q - 1))
+            continue
+        sub = _subgamma(gamma, r)
+        sp = jagged.jag_m_heur_probe(sub, q, speeds=sl, orient="hor")
+        sub_rects = _offset(list(sp.rects), r)
+        # a zero-load part can come back with fewer than q rects
+        # (nicol_multi's degenerate path); pad to keep positions aligned
+        while len(sub_rects) < q:
+            sub_rects.append(Rect(r.r0, r.r0, r.c0, r.c0))
+        assert len(sub_rects) == q, (s, len(sub_rects), q)
+        rects.extend(sub_rects)
+    return Partition(rects, (n1, n2), m_target=m)
+
+
 def _hybrid(gamma: np.ndarray, m: int, P: int | None, p_min: int | None,
             slow, refine: bool, exhaustive: bool,
             slow_parts: int | None) -> Partition:
@@ -346,33 +393,49 @@ def _hybrid(gamma: np.ndarray, m: int, P: int | None, p_min: int | None,
 
 
 def hybrid(gamma: np.ndarray, m: int, P: int | None = None, *,
-           p_min: int | None = None, slow="opt",
-           refine: bool = True) -> Partition:
+           p_min: int | None = None, slow="opt", refine: bool = True,
+           speeds: np.ndarray | None = None) -> Partition:
     """Engine-native HYBRID (paper's best configuration).
 
     ``P`` fixes the phase-1 part count; ``P=None`` runs the expected-LI
     scan.  ``refine=False`` skips the fast/slow loop (fast phase 2 only).
+    ``speeds`` switches to the capacity-aware two-phase pipeline
+    (``_hybrid_speeds``); uniform vectors normalize away and run the
+    homogeneous pipeline bit-identically.
     """
+    sp = search.normalize_speeds(speeds, m) if speeds is not None else None
+    if sp is not None:
+        return _hybrid_speeds(gamma, m, P, sp)
     return _hybrid(gamma, m, P, p_min, slow, refine,
                    exhaustive=False, slow_parts=None)
 
 
 def hybrid_auto(gamma: np.ndarray, m: int, *, p_min: int | None = None,
-                slow="opt", refine: bool = True) -> Partition:
+                slow="opt", refine: bool = True,
+                speeds: np.ndarray | None = None) -> Partition:
     """HYBRID with P chosen by the expected-LI scan (paper Figure 16)."""
+    sp = search.normalize_speeds(speeds, m) if speeds is not None else None
+    if sp is not None:
+        return _hybrid_speeds(gamma, m, None, sp)
     return _hybrid(gamma, m, None, p_min, slow, refine,
                    exhaustive=False, slow_parts=None)
 
 
 def hybrid_fastslow(gamma: np.ndarray, m: int, P: int | None = None, *,
                     p_min: int | None = None, slow="opt",
-                    slow_parts: int | None = None) -> Partition:
+                    slow_parts: int | None = None,
+                    speeds: np.ndarray | None = None) -> Partition:
     """HYBRID's time/quality knob: exhaustive fast/slow refinement.
 
     Instead of stopping at the first part the slow algorithm fails to
     improve, every part (or the hottest ``slow_parts`` of them) is
     re-optimized in load order — never worse than :func:`hybrid`, at
-    slow-phase cost proportional to ``slow_parts``.
+    slow-phase cost proportional to ``slow_parts``.  With heterogeneous
+    ``speeds`` the refinement loop is skipped (it ranks parts by raw
+    load), so this coincides with :func:`hybrid`.
     """
+    sp = search.normalize_speeds(speeds, m) if speeds is not None else None
+    if sp is not None:
+        return _hybrid_speeds(gamma, m, P, sp)
     return _hybrid(gamma, m, P, p_min, slow, True,
                    exhaustive=True, slow_parts=slow_parts)

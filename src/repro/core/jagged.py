@@ -44,11 +44,41 @@ def _build(gamma, row_cuts, col_cuts_list) -> Partition:
     return from_row_cuts_and_col_cuts(row_cuts, col_cuts_list, (n1, n2))
 
 
+def _relative_max_load(part: Partition, gamma: np.ndarray,
+                       speeds: np.ndarray) -> float:
+    """Bottleneck on relative load: rect ``i`` belongs to processor ``i``
+    (positional — the builders keep zero-width rects, so the order is the
+    processor order).  Zero-load rects are 0 whatever their speed; a
+    *loaded* dead processor comes back inf."""
+    loads = part.loads(gamma).astype(np.float64)
+    sp = np.asarray(speeds, dtype=np.float64)[:loads.size]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / sp, 0.0)
+    return float(rel.max(initial=0.0))
+
+
 def _with_orientation(fn):
-    """Add orient='hor'|'ver'|'best' handling to a gamma-based algorithm."""
+    """Add orient='hor'|'ver'|'best' handling to a gamma-based algorithm.
+
+    ``speeds`` is normalized here, before any branching: uniform vectors
+    are *dropped* from the kwargs so both orientations — and the 'best'
+    comparison — run the exact homogeneous code path (bit-identical to
+    ``speeds=None``; a relative comparison could flip ties through float
+    division otherwise).  Speeds index processors, not grid axes, so the
+    vector passes to the transposed call unchanged; with heterogeneous
+    speeds the 'best' pick compares relative bottlenecks.
+    """
 
     @functools.wraps(fn)
     def wrapped(gamma, m, *args, orient: str = "best", **kw):
+        if kw.get("speeds") is not None:
+            sp = search.normalize_speeds(kw["speeds"], m)
+            if sp is None:
+                kw.pop("speeds")
+            else:
+                kw["speeds"] = sp
+        elif "speeds" in kw:
+            kw.pop("speeds")
         if orient == "hor":
             return fn(gamma, m, *args, **kw)
         if orient == "ver":
@@ -57,9 +87,35 @@ def _with_orientation(fn):
             return Partition(rects, (part.shape[1], part.shape[0]))
         h = wrapped(gamma, m, *args, orient="hor", **kw)
         v = wrapped(gamma, m, *args, orient="ver", **kw)
+        sp = kw.get("speeds")
+        if sp is not None:
+            return h if (_relative_max_load(h, gamma, sp)
+                         <= _relative_max_load(v, gamma, sp)) else v
         return h if h.max_load(gamma) <= v.max_load(gamma) else v
 
     return wrapped
+
+
+def _speed_chunks(speeds: np.ndarray, P: int) -> np.ndarray:
+    """Chunk the m-position speed vector into P contiguous non-empty runs
+    of roughly equal speed mass (DirectCut on the speed prefix).
+
+    The chunk sums act as stripe-level aggregate speeds; each stripe's
+    columns then split over its own chunk.  Zero-speed runs can collapse a
+    DirectCut chunk to nothing, so the cuts are pushed apart (forward then
+    backward) to keep every chunk non-empty — needs ``m >= P``.
+    """
+    m = len(speeds)
+    if m < P:
+        raise ValueError(f"need m >= P, got m={m} P={P}")
+    sp = np.concatenate([[0.0],
+                         np.cumsum(np.asarray(speeds, dtype=np.float64))])
+    cuts = oned.direct_cut(sp, P).astype(np.int64)
+    for i in range(1, P):
+        cuts[i] = max(cuts[i], cuts[i - 1] + 1)
+    for i in range(P - 1, 0, -1):
+        cuts[i] = min(cuts[i], cuts[i + 1] - 1)
+    return cuts
 
 
 def _default_pq(m: int) -> tuple[int, int]:
@@ -81,9 +137,21 @@ def _stripe_matrix(gamma: np.ndarray, row_cuts) -> np.ndarray:
 
 @_with_orientation
 def jag_pq_heur(gamma: np.ndarray, m: int, P: int | None = None,
-                Q: int | None = None) -> Partition:
+                Q: int | None = None,
+                speeds: np.ndarray | None = None) -> Partition:
     if P is None or Q is None:
         P, Q = _default_pq(m)
+    if speeds is not None:
+        # stripe s owns the contiguous positions [s*Q, (s+1)*Q) (row-major
+        # rect order); rows split on aggregate stripe speeds, columns on
+        # each stripe's own slice.
+        gsum = np.add.reduceat(speeds, np.arange(0, P * Q, Q))
+        row_cuts = oned.optimal_1d(row_prefix(gamma), P, speeds=gsum)
+        sm = _stripe_matrix(gamma, row_cuts)
+        col_cuts = [oned.optimal_1d(sm[s], Q,
+                                    speeds=speeds[s * Q:(s + 1) * Q])
+                    for s in range(P)]
+        return _build(gamma, row_cuts, col_cuts)
     row_cuts = oned.optimal_1d(row_prefix(gamma), P)
     col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, row_cuts),
                                      [Q] * P)
@@ -202,12 +270,19 @@ class _RowProbe:
 
 @_with_orientation
 def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
-               Q: int | None = None) -> Partition:
+               Q: int | None = None,
+               speeds: np.ndarray | None = None) -> Partition:
     """Exact P x Q jagged: wide-bisect L; the probe greedily extends each
     stripe to the largest row range whose optimal Q-way bottleneck is <= L
-    (the cost of a stripe is monotone non-decreasing in its row range)."""
+    (the cost of a stripe is monotone non-decreasing in its row range).
+
+    With ``speeds``, L is the *relative* bottleneck and each stripe packs
+    against its own Q-position speed slice (see ``_jag_pq_opt_hetero``).
+    """
     if P is None or Q is None:
         P, Q = _default_pq(m)
+    if speeds is not None:
+        return _jag_pq_opt_hetero(gamma, m, P, Q, speeds)
     lo = float(gamma[-1, -1]) / m
     heur = jag_pq_heur(gamma, m, P=P, Q=Q, orient="hor")
     hi = heur.max_load(gamma)
@@ -218,6 +293,61 @@ def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
     best_cuts = search.realize(rprobe.cuts, L, integral=integral)
     col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, best_cuts),
                                      [Q] * P)
+    return _build(gamma, best_cuts, col_cuts)
+
+
+def _jag_pq_opt_hetero(gamma: np.ndarray, m: int, P: int, Q: int,
+                       speeds: np.ndarray) -> Partition:
+    """Exact P x Q jagged on relative load (speeds pre-normalized).
+
+    Scalar bisection on L; the row probe extends stripe ``s`` to the
+    largest row range packing into its own speed slice
+    ``speeds[s*Q:(s+1)*Q]`` at capacity ``L * speed`` per position.
+    Coverage is monotone in the row range (domination), so the largest-e
+    search is a bisection; a dead stripe (all-zero slice) simply does not
+    advance — an empty stripe, legal in the hetero greedy.
+    """
+    n1 = gamma.shape[0] - 1
+    sv = StripeView(gamma)
+    rp = row_prefix(gamma)
+
+    def _largest_e(b: int, s: int, L: float) -> int:
+        sl = speeds[s * Q:(s + 1) * Q]
+        cap_tot = L * float(sl.sum())
+        if cap_tot <= 0:
+            return b
+        e_ub = int(rp.searchsorted(rp[b] + cap_tot, side="right")) - 1
+        e_ub = min(max(e_ub, b), n1)
+        if e_ub <= b:
+            return b
+
+        def fits(e: int) -> bool:
+            return oned.probe_count(sv.prefix(b, e), L, Q, speeds=sl) <= Q
+
+        if fits(e_ub):
+            return e_ub
+        first_bad = search.bisect_index(lambda e: not fits(e), b + 1, e_ub)
+        return first_bad - 1
+
+    def cuts(L: float) -> np.ndarray | None:
+        out = np.empty(P + 1, dtype=np.int64)
+        out[0] = 0
+        b = 0
+        for s in range(P):
+            b = _largest_e(b, s, L)
+            out[s + 1] = b
+        return out if b >= n1 else None
+
+    heur = jag_pq_heur(gamma, m, P=P, Q=Q, speeds=speeds, orient="hor")
+    lo = float(gamma[-1, -1]) / float(speeds.sum())
+    hi = max(_relative_max_load(heur, gamma, speeds), lo) \
+        * (1 + 1e-9) + 1e-12
+    L = search.bisect_bottleneck_scalar(
+        lambda Lc: cuts(Lc) is not None, lo, hi, integral=False)
+    best_cuts = search.realize(cuts, L, integral=False)
+    sm = _stripe_matrix(gamma, best_cuts)
+    col_cuts = [oned.optimal_1d(sm[s], Q, speeds=speeds[s * Q:(s + 1) * Q])
+                for s in range(P)]
     return _build(gamma, best_cuts, col_cuts)
 
 
@@ -257,11 +387,26 @@ def _proportional_counts(stripe_loads: np.ndarray, m: int) -> list[int]:
 
 
 @_with_orientation
-def jag_m_heur(gamma: np.ndarray, m: int, P: int | None = None) -> Partition:
+def jag_m_heur(gamma: np.ndarray, m: int, P: int | None = None,
+               speeds: np.ndarray | None = None) -> Partition:
     if P is None:
         P = max(int(round(np.sqrt(m))), 1)
     P = min(P, m)
     rp = row_prefix(gamma)
+    if speeds is not None:
+        # positions chunk into P contiguous runs of ~equal speed mass;
+        # rows split on the aggregate chunk speeds, each stripe's columns
+        # on its own chunk slice.  Chunk widths replace the proportional
+        # count allocation (counts are fixed by the position mapping).
+        P = max(min(P, int((speeds > 0).sum())), 1)
+        chunk = _speed_chunks(speeds, P)
+        gsum = np.add.reduceat(speeds, chunk[:-1])
+        row_cuts = oned.optimal_1d(rp, P, speeds=gsum)
+        sm = _stripe_matrix(gamma, row_cuts)
+        col_cuts = [oned.optimal_1d(sm[s], int(chunk[s + 1] - chunk[s]),
+                                    speeds=speeds[chunk[s]:chunk[s + 1]])
+                    for s in range(P)]
+        return _build(gamma, row_cuts, col_cuts)
     row_cuts = oned.optimal_1d(rp, P)
     loads = (rp[row_cuts[1:]] - rp[row_cuts[:-1]]).astype(np.float64)
     counts = _proportional_counts(loads, m)
@@ -270,20 +415,30 @@ def jag_m_heur(gamma: np.ndarray, m: int, P: int | None = None) -> Partition:
 
 
 def jag_m_probe_given_stripes(gamma: np.ndarray, m: int,
-                              row_cuts: np.ndarray) -> Partition:
+                              row_cuts: np.ndarray,
+                              speeds: np.ndarray | None = None) -> Partition:
     """JAG-M-PROBE: optimal counts + cuts for fixed main-dimension stripes."""
     ps = _stripe_matrix(gamma, row_cuts)
-    _, _, cuts = oned.nicol_multi(ps, m)
+    _, _, cuts = oned.nicol_multi(list(ps), m, speeds=speeds)
     return _build(gamma, row_cuts, cuts)
 
 
 @_with_orientation
-def jag_m_heur_probe(gamma: np.ndarray, m: int,
-                     P: int | None = None) -> Partition:
+def jag_m_heur_probe(gamma: np.ndarray, m: int, P: int | None = None,
+                     speeds: np.ndarray | None = None) -> Partition:
     """JAG-M-HEUR-PROBE: stripes from JAG-M-HEUR, allocation by JAG-M-PROBE."""
     if P is None:
         P = max(int(round(np.sqrt(m))), 1)
     P = min(P, m)
+    if speeds is not None:
+        # PROBE-M hands stripes contiguous position runs in order, so the
+        # row cuts are seeded from the same chunked aggregate speeds; the
+        # probe then resolves the exact counts against the full schedule.
+        P = max(min(P, int((speeds > 0).sum())), 1)
+        chunk = _speed_chunks(speeds, P)
+        gsum = np.add.reduceat(speeds, chunk[:-1])
+        row_cuts = oned.optimal_1d(row_prefix(gamma), P, speeds=gsum)
+        return jag_m_probe_given_stripes(gamma, m, row_cuts, speeds=speeds)
     row_cuts = oned.optimal_1d(row_prefix(gamma), P)
     return jag_m_probe_given_stripes(gamma, m, row_cuts)
 

@@ -150,13 +150,32 @@ def dp_optimal(p: np.ndarray, m: int) -> np.ndarray:
     return cuts
 
 
-def probe(p: np.ndarray, m: int, L: float) -> np.ndarray | None:
+def probe(p: np.ndarray, m: int, L: float,
+          speeds: np.ndarray | None = None) -> np.ndarray | None:
     """Greedy feasibility: pack intervals of load <= L; None if infeasible.
 
     Each step extends the current interval maximally via one binary search
     on the prefix array (Han et al.), O(m log n).
+
+    With ``speeds``, interval ``i`` runs on processor ``i`` and must keep
+    its *relative* load ``(p[e]-p[b]) / speeds[i] <= L`` (capacity
+    ``L * speeds[i]``).  Unlike the homogeneous greedy, empty intervals
+    are allowed mid-chain: a dead (``speed=0``) or too-slow processor is
+    simply skipped and its share shifts to later, faster ones — maximal
+    extension stays exact for the fixed processor order.
     """
     n = len(p) - 1
+    if speeds is not None:
+        cuts = np.empty(m + 1, dtype=np.int64)
+        cuts[0] = 0
+        b = 0
+        for i in range(1, m + 1):
+            cap = L * float(speeds[i - 1])
+            if cap > 0:
+                e = int(np.searchsorted(p, p[b] + cap, side="right")) - 1
+                b = min(max(e, b), n)
+            cuts[i] = b
+        return cuts if b >= n else None
     cuts = np.empty(m + 1, dtype=np.int64)
     cuts[0] = 0
     b = 0
@@ -172,13 +191,30 @@ def probe(p: np.ndarray, m: int, L: float) -> np.ndarray | None:
     return None if b < n else cuts
 
 
-def probe_count(p: np.ndarray, L: float, cap: int, start: int = 0) -> int:
+def probe_count(p: np.ndarray, L: float, cap: int, start: int = 0,
+                speeds: np.ndarray | None = None) -> int:
     """#intervals of load <= L covering p[start:]; > cap returned as cap+1.
 
     Works in-place on the full prefix array (no rebasing copy), so a call is
     O(k log n) for k resulting intervals.
+
+    With ``speeds`` (the per-position capacity schedule this chain will
+    consume, in order), the count is the number of schedule positions
+    consumed: position ``k`` packs at most ``L * speeds[k]``, and a
+    zero-speed position is consumed with an empty interval rather than
+    declaring the chain stuck.
     """
     n = len(p) - 1
+    if speeds is not None:
+        b = start
+        for k in range(int(cap)):
+            if b >= n:
+                return max(k, 1)
+            sp = float(speeds[k]) if k < len(speeds) else 0.0
+            if sp > 0:
+                e = int(np.searchsorted(p, p[b] + L * sp, side="right")) - 1
+                b = min(max(e, b), n)
+        return max(int(cap), 1) if b >= n else int(cap) + 1
     b, cnt = start, 0
     while b < n:
         if cnt >= cap:
@@ -199,8 +235,8 @@ def _lower_bound(p: np.ndarray, m: int) -> float:
     return max(float(p[n]) / m, maxel)
 
 
-def probe_bisect_optimal(p: np.ndarray, m: int, *,
-                         warm: float | None = None) -> np.ndarray:
+def probe_bisect_optimal(p: np.ndarray, m: int, *, warm: float | None = None,
+                         speeds: np.ndarray | None = None) -> np.ndarray:
     """Exact optimal for integer loads: wide bisection on L with ``probe``.
 
     UB is the DirectCut bound sum/m + max (Section 2.2); the multi-L engine
@@ -211,10 +247,24 @@ def probe_bisect_optimal(p: np.ndarray, m: int, *,
     instance (``serve.batcher.replan``, the rebalance runtime).  One probe
     classifies it — feasible tightens ``hi``, infeasible raises ``lo`` — so
     the bisection only has to resolve the *drift* since the last plan.
+
+    ``speeds`` switches the objective to the heterogeneous-capacity one:
+    minimize ``max_i (p[c_{i+1}]-p[c_i]) / speeds[i]`` over the fixed
+    processor order (Tzovas et al.).  Uniform vectors normalize away and
+    take the homogeneous path bit-identically; zero-load arrays also do
+    (every interval is empty — relative load 0 for any speeds, and this
+    keeps all-zero-speed slices of empty stripes legal).  ``warm`` is then
+    a *relative* bottleneck.
     """
     n = len(p) - 1
     if n == 0:
         return np.zeros(m + 1, dtype=np.int64)
+    if speeds is not None and float(p[n] - p[0]) > 0:
+        speeds = search.normalize_speeds(speeds, m)
+    else:
+        speeds = None
+    if speeds is not None:
+        return _probe_bisect_hetero(p, m, speeds, warm=warm)
     integral = np.issubdtype(p.dtype, np.integer)
     lo = _lower_bound(p, m)
     hi = float(p[n]) / m + float((p[1:] - p[:-1]).max(initial=0))
@@ -235,6 +285,43 @@ def probe_bisect_optimal(p: np.ndarray, m: int, *,
             lambda Ls: packed.counts(Ls, m)[0] <= m, lo, hi,
             integral=integral)
     return search.realize(lambda Lc: probe(p, m, Lc), L, integral=integral)
+
+
+def _probe_bisect_hetero(p: np.ndarray, m: int, speeds: np.ndarray, *,
+                         warm: float | None = None) -> np.ndarray:
+    """Capacity-aware bisection on relative load (speeds pre-normalized).
+
+    Exact for the fixed processor order: the greedy probe allows empty
+    intervals, so slow/dead positions are skipped and feasibility stays
+    monotone in L.  Heterogeneous capacities are not integral even on
+    integer loads, so this always runs the float bisection (1e-9
+    relative).  ``hi`` is everything-on-the-fastest-processor — reachable
+    because the probe may leave every other position empty — padded by an
+    ulp so float rounding cannot push the greedy below feasibility at
+    exactly ``hi``.
+    """
+    n = len(p) - 1
+    total = float(p[n] - p[0])
+    maxel = float((p[1:] - p[:-1]).max(initial=0))
+    smax = float(speeds.max())
+    lo = max(total / float(speeds.sum()), maxel / smax)
+    hi = (total / smax) * (1 + 1e-9) + 1e-12
+    if warm is not None and lo < warm < hi:
+        if probe(p, m, float(warm), speeds) is not None:
+            hi = float(warm)
+        else:
+            lo = float(warm)
+    if n * m <= 2048:
+        L = search.bisect_bottleneck_scalar(
+            lambda Lc: probe(p, m, Lc, speeds) is not None,
+            lo, hi, integral=False)
+    else:
+        packed = search.PackedPrefixes(p[None, :])
+        L = search.bisect_bottleneck(
+            lambda Ls: packed.counts(Ls, m, speeds=speeds)[0] <= m,
+            lo, hi, integral=False)
+    return search.realize(lambda Lc: probe(p, m, Lc, speeds), L,
+                          integral=False)
 
 
 def optimal_1d_batch(ps, ms) -> list[np.ndarray]:
@@ -276,8 +363,16 @@ def optimal_1d_batch(ps, ms) -> list[np.ndarray]:
     return out
 
 
-def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
+def nicol_optimal(p: np.ndarray, m: int,
+                  speeds: np.ndarray | None = None) -> np.ndarray:
     """Nicol's parametric search: exact for arbitrary (float) loads.
+
+    With ``speeds``, the parametric chain does not transfer — its
+    candidate bottlenecks are realizable interval *sums* ``L(b, e)``,
+    while heterogeneous bottlenecks are sums scaled by per-position
+    speeds — so this routes to the capacity-aware relative-load bisection
+    (:func:`probe_bisect_optimal`), which is exact for the fixed order to
+    1e-9 relative.
 
     For each leading processor j, in an optimal solution its interval is
     either (a) the bottleneck -- then it is the *smallest* e with
@@ -287,6 +382,10 @@ def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
     The optimum is the best candidate seen along the chain (Nicol 1994;
     engineering per Pinar-Aykanat 2004). O((m log n)^2)-ish.
     """
+    if speeds is not None:
+        speeds = search.normalize_speeds(speeds, m)
+    if speeds is not None:
+        return probe_bisect_optimal(p, m, speeds=speeds)
     n = len(p) - 1
     best_L = float(p[n] - p[0])  # j covers everything candidate
     b = 0
@@ -316,26 +415,35 @@ def nicol_optimal(p: np.ndarray, m: int) -> np.ndarray:
     return search.realize(lambda Lc: probe(p, m, Lc), best_L, integral=False)
 
 
-def optimal_1d(p: np.ndarray, m: int, *,
-               warm: float | None = None) -> np.ndarray:
-    """Default exact 1D partitioner (probe-bisection; see module docstring)."""
-    return probe_bisect_optimal(p, m, warm=warm)
+def optimal_1d(p: np.ndarray, m: int, *, warm: float | None = None,
+               speeds: np.ndarray | None = None) -> np.ndarray:
+    """Default exact 1D partitioner (probe-bisection; see module docstring).
+
+    ``speeds`` minimizes the relative bottleneck ``load_i / speeds[i]``
+    over the fixed processor order; dead (``speed=0``) positions receive
+    empty intervals.
+    """
+    return probe_bisect_optimal(p, m, warm=warm, speeds=speeds)
 
 
 # ---------------------------------------------------------------------------
 # Multi-array machinery (paper Section 3.2.2: PROBE-M / JAG-M-PROBE engine)
 
 
-def probe_multi(ps: list[np.ndarray], m: int, L: float) -> list[int] | None:
+def probe_multi(ps: list[np.ndarray], m: int, L: float,
+                speeds: np.ndarray | None = None) -> list[int] | None:
     """PROBE-M: processors needed per array for bottleneck L; None if > m.
 
     Every (non-empty) array needs at least one processor (its elements must
-    be covered by intervals inside that array).
+    be covered by intervals inside that array).  With ``speeds``, the
+    arrays consume a prefix of the fixed processor order and each array's
+    greedy runs against its own slice of the remaining speed schedule.
     """
     counts = []
     used = 0
     for p in ps:
-        c = probe_count(p, L, m - used)
+        c = probe_count(p, L, m - used,
+                        speeds=None if speeds is None else speeds[used:])
         if used + c > m:
             return None
         counts.append(c)
@@ -343,7 +451,8 @@ def probe_multi(ps: list[np.ndarray], m: int, L: float) -> list[int] | None:
     return counts
 
 
-def nicol_multi(ps: list[np.ndarray], m: int
+def nicol_multi(ps: list[np.ndarray], m: int,
+                speeds: np.ndarray | None = None
                 ) -> tuple[float, list[int], list[np.ndarray]]:
     """Optimal multi-array partition: wide bisection on L with PROBE-M.
 
@@ -351,7 +460,14 @@ def nicol_multi(ps: list[np.ndarray], m: int
     per-array cut arrays). Exact for integer loads; 1e-9-relative for float.
     After finding L*, leftover processors are spread greedily to the arrays
     with the highest per-processor load (never hurts the bottleneck).
+
+    With ``speeds`` (length ``m``, the fixed processor order the arrays
+    consume as a prefix), everything runs on relative load — bottleneck,
+    bisection, per-array cuts — and dead (``speed=0``) positions receive
+    empty intervals.  Counts then sum to exactly ``m``.
     """
+    if speeds is not None:
+        speeds = search.normalize_speeds(speeds, m)
     totals = np.array([float(p[-1]) for p in ps])
     maxels = np.array([float((p[1:] - p[:-1]).max(initial=0)) for p in ps])
     total = totals.sum()
@@ -363,6 +479,8 @@ def nicol_multi(ps: list[np.ndarray], m: int
         return 0.0, counts, cuts
     if m < len(ps):
         raise ValueError(f"need m >= #arrays, got m={m} arrays={len(ps)}")
+    if speeds is not None:
+        return _nicol_multi_hetero(ps, m, speeds, totals, maxels, total)
     lo = max(total / m, maxels.max(initial=0.0))
     hi = float(totals.max(initial=0.0))  # one interval per array: feasible
     integral = all(np.issubdtype(p.dtype, np.integer) for p in ps)
@@ -382,4 +500,55 @@ def nicol_multi(ps: list[np.ndarray], m: int
     # realize each array's cuts optimally with its processor count
     cuts = optimal_1d_batch(ps, counts)
     bott = max(max_interval_load(p, c) for p, c in zip(ps, cuts))
+    return bott, counts, cuts
+
+
+def _rel_interval_loads(p: np.ndarray, cuts: np.ndarray,
+                        speeds: np.ndarray) -> np.ndarray:
+    """Per-interval relative loads ``load_i / speeds[i]``.
+
+    Zero-load intervals are 0 regardless of speed (a dead position with an
+    empty interval is fine); a *loaded* zero-speed interval comes back inf,
+    which is exactly the signal callers want to see for an invalid plan.
+    """
+    cuts = np.asarray(cuts)
+    loads = (p[cuts[1:]] - p[cuts[:-1]]).astype(np.float64)
+    sp = np.asarray(speeds, dtype=np.float64)[:loads.size]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(loads > 0, loads / sp, 0.0)
+
+
+def _nicol_multi_hetero(ps, m, speeds, totals, maxels, total):
+    """PROBE-M on heterogeneous capacity (speeds pre-normalized).
+
+    The arrays consume a prefix of the fixed processor order; position
+    ``i``'s capacity is ``L * speeds[i]``.  Needs at least as many
+    positive-speed positions as arrays (each non-empty array must reach a
+    positive position of its own).  At ``hi`` — total load over the
+    slowest of the first ``S`` positive positions — array ``s`` can cover
+    everything from the ``s``-th positive position with empty intervals
+    padding the gaps, so ``hi`` is feasible.  Leftover positions go to the
+    *last* array only, keeping every earlier array on the exact speed
+    prefix the probe solved it for.
+    """
+    S = len(ps)
+    pos = np.flatnonzero(speeds > 0)
+    if pos.size < S:
+        raise ValueError(f"need >= {S} positive-speed processors for "
+                         f"{S} arrays, got {pos.size}")
+    smax = float(speeds.max())
+    lo = max(total / float(speeds.sum()), float(maxels.max(initial=0)) / smax)
+    hi = (total / float(speeds[pos[:S]].min())) * (1 + 1e-9) + 1e-12
+    L = search.bisect_bottleneck_scalar(
+        lambda Lc: probe_multi(ps, m, Lc, speeds) is not None, lo, hi,
+        integral=False)
+    counts = list(search.realize(
+        lambda Lc: probe_multi(ps, m, Lc, speeds), L, integral=False))
+    counts[-1] += m - sum(counts)
+    offs = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    cuts = [optimal_1d(p, int(c), speeds=speeds[offs[s]:offs[s + 1]])
+            for s, (p, c) in enumerate(zip(ps, counts))]
+    bott = max(float(_rel_interval_loads(
+        p, c, speeds[offs[s]:offs[s + 1]]).max(initial=0.0))
+        for s, (p, c) in enumerate(zip(ps, cuts)))
     return bott, counts, cuts

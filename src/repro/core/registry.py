@@ -10,10 +10,23 @@ from typing import Callable
 
 import numpy as np
 
-from . import hier, hybrid, jagged, rect
+from . import hier, hybrid, jagged, rect, search
 from .types import Partition
 
 _REGISTRY: dict[str, Callable[..., Partition]] = {}
+
+# Algorithms that accept a heterogeneous per-processor ``speeds`` vector
+# (relative-load objective; dead speed=0 parts get zero-width rects).
+# Uniform/None speeds are legal everywhere — they normalize away before
+# dispatch, so every algorithm stays bit-identical to its homogeneous self.
+CAPACITY_AWARE = frozenset(
+    {"jag-pq-heur", "jag-pq-opt", "jag-m-heur", "jag-m-heur-probe"}
+    | {f"{_n}-{_o}"
+       for _n in ("jag-pq-heur", "jag-pq-opt", "jag-m-heur",
+                  "jag-m-heur-probe")
+       for _o in ("hor", "ver")}
+    | {"hybrid", "hybrid_auto", "hybrid-auto", "hybrid_fastslow",
+       "hybrid-fastslow"})
 
 
 def register(name: str):
@@ -33,8 +46,18 @@ def names() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def partition(name: str, gamma: np.ndarray, m: int, **kw) -> Partition:
-    p = get(name)(gamma, m, **kw)
+def partition(name: str, gamma: np.ndarray, m: int, *,
+              speeds=None, **kw) -> Partition:
+    fn = get(name)
+    sp = search.normalize_speeds(speeds, m) if speeds is not None else None
+    if sp is None:
+        p = fn(gamma, m, **kw)
+    elif name in CAPACITY_AWARE:
+        p = fn(gamma, m, speeds=sp, **kw)
+    else:
+        raise ValueError(
+            f"{name!r} does not support heterogeneous speeds; "
+            f"capacity-aware algorithms: {sorted(CAPACITY_AWARE)}")
     if p.m_target is None:
         p.m_target = m
     return p

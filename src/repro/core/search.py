@@ -31,8 +31,38 @@ import numpy as np
 __all__ = [
     "PackedPrefixes", "bisect_bottleneck", "bisect_bottleneck_batch",
     "bisect_bottleneck_multi", "bisect_bottleneck_scalar", "bisect_index",
-    "chain_fits", "realize", "split_candidates",
+    "chain_fits", "normalize_speeds", "realize", "split_candidates",
 ]
+
+
+def normalize_speeds(speeds, m: int) -> np.ndarray | None:
+    """Canonicalize a per-processor speed vector for capacity-aware probes.
+
+    Returns ``None`` for the homogeneous case — ``speeds=None`` *or* any
+    all-equal positive vector (``np.ones(m)`` included) — so every caller
+    that branches on the result routes uniform speeds through the exact
+    same code path as no speeds at all (bit-identical cuts, bottlenecks
+    reported in load units).  A genuinely heterogeneous vector comes back
+    as a float64 copy: length ``m``, finite, non-negative, with at least
+    one positive entry (``speed == 0`` marks a dead processor that may
+    only receive empty intervals).
+    """
+    if speeds is None:
+        return None
+    sp = np.asarray(speeds, dtype=np.float64)
+    if sp.ndim != 1 or sp.size != int(m):
+        raise ValueError(f"speeds must be a 1D length-{m} vector, got "
+                         f"shape {sp.shape}")
+    if not np.isfinite(sp).all():
+        raise ValueError("speeds must be finite (got NaN/inf)")
+    if (sp < 0).any():
+        raise ValueError("speeds must be non-negative (0 = dead processor)")
+    smax = float(sp.max(initial=0.0))
+    if smax <= 0:
+        raise ValueError("at least one speed must be positive")
+    if (sp == sp[0]).all():
+        return None  # uniform: relative load == load / const, same cuts
+    return sp.copy()
 
 
 # ---------------------------------------------------------------------------
@@ -81,7 +111,7 @@ class PackedPrefixes:
             self.flat = np.concatenate(
                 [p + sh for p, sh in zip(rows, shifts)])
 
-    def counts(self, Ls, cap, rows=None):
+    def counts(self, Ls, cap, rows=None, speeds=None):
         """Greedy interval counts per (row, candidate), capped.
 
         Ls: ``(K,)`` candidates shared by all rows, or ``(S, K)`` per-row.
@@ -91,7 +121,16 @@ class PackedPrefixes:
         the sentinel ``cap + 1`` for chains that exceed the cap or get
         stuck (a single element > L); empty rows count 1, mirroring
         ``oned.probe_count``.
+
+        ``speeds`` switches every chain to the capacity-aware greedy: step
+        ``k``'s interval must satisfy ``load / speeds[k] <= L`` (capacity
+        ``L * speeds[k]``), i.e. the bisection runs on *relative* load.
+        Counts are then positions consumed off the shared speed schedule —
+        a zero-speed step takes an empty interval and moves on instead of
+        terminating the chain.
         """
+        if speeds is not None:
+            return self._counts_speeds(Ls, cap, rows, speeds)
         Ls = np.atleast_2d(np.asarray(Ls))
         starts = self.starts if rows is None else self.starts[rows]
         row_ends = self.ends if rows is None else self.ends[rows]
@@ -115,6 +154,54 @@ class PackedPrefixes:
             np.add(counts, moved, out=counts, casting="unsafe")
             fpos = np.where(moved, raw, fpos)
         # chains that froze mid-row (stuck or over cap) are infeasible
+        unfinished = fpos < ends
+        if unfinished.any():
+            if capa.ndim:
+                sentinel = np.broadcast_to(capa + 1, (S, K))
+                counts[unfinished] = sentinel[unfinished]
+            else:
+                counts[unfinished] = int(capa) + 1
+        np.maximum(counts, 1, out=counts)
+        return counts
+
+    def _counts_speeds(self, Ls, cap, rows, speeds):
+        """Capacity-aware twin of the homogeneous loop in :meth:`counts`.
+
+        The schedule is walked position by position (at most ``cap`` of
+        them): a positive-speed step advances every live chain maximally
+        within capacity ``L * speeds[k]``; a zero-speed step consumes its
+        position without advancing anyone — it must *not* break the loop
+        the way a globally-stuck homogeneous round does, because later
+        (positive) positions can still finish the chain.  A chain's count
+        is the number of schedule positions consumed when its row is first
+        covered.
+        """
+        Ls = np.atleast_2d(np.asarray(Ls, dtype=np.float64))
+        starts = self.starts if rows is None else self.starts[rows]
+        row_ends = self.ends if rows is None else self.ends[rows]
+        S = starts.shape[0]
+        K = Ls.shape[-1]
+        Ls = np.broadcast_to(Ls, (S, K))
+        sp = np.asarray(speeds, dtype=np.float64)
+        capa = np.asarray(cap)
+        cap_i = int(capa.max()) if capa.size else 0
+        flat, ends = self.flat, row_ends[:, None]
+        fpos = np.broadcast_to(starts[:, None], (S, K)).copy()
+        counts = np.zeros((S, K), dtype=np.int64)
+        done = fpos >= ends
+        for k in range(min(cap_i, sp.size)):
+            if done.all():
+                break
+            if sp[k] > 0:
+                t = flat.take(fpos) + Ls * sp[k]
+                raw = flat.searchsorted(t, side="right")
+                raw -= 1
+                np.minimum(raw, ends, out=raw)
+                np.maximum(raw, fpos, out=raw)
+                fpos = np.where(done, fpos, raw)
+            just = ~done & (fpos >= ends)
+            counts[just] = k + 1
+            done |= just
         unfinished = fpos < ends
         if unfinished.any():
             if capa.ndim:

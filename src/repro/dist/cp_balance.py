@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import oned
+from repro.core import jagged, oned, search
 from repro.rebalance.policy import HysteresisPolicy, StepState, \
     replan_mode
 
@@ -55,18 +55,36 @@ def contiguous_plan(n_blocks: int, R: int) -> np.ndarray:
     return np.round(np.arange(R + 1) * (n_blocks / R)).astype(np.int64)
 
 
-def balanced_plan(n_blocks: int, R: int, window_blocks: int = 0
-                  ) -> np.ndarray:
+def _rel_interval_max(p: np.ndarray, cuts: np.ndarray, speeds) -> float:
+    """Max (relative) interval load: ``load_r / speeds[r]``, 0 for empty
+    ranks — a loaded dead rank costs ``inf``."""
+    if speeds is None:
+        return oned.max_interval_load(p, cuts)
+    cuts = np.asarray(cuts)
+    loads = (p[cuts[1:]] - p[cuts[:-1]]).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / speeds[:loads.size], 0.0)
+    return float(rel.max(initial=0.0))
+
+
+def balanced_plan(n_blocks: int, R: int, window_blocks: int = 0,
+                  *, speeds=None) -> np.ndarray:
     """Optimal contiguous cuts for the causal cost profile.
 
     Exact (integer costs) via probe-bisection on the shared engine; the
-    plan keeps each rank's KV a single contiguous span.
+    plan keeps each rank's KV a single contiguous span.  ``speeds`` is an
+    optional per-rank capacity vector (mixed hardware / degraded ranks):
+    the split minimizes the *relative* bottleneck ``load_r / speeds[r]``
+    and dead (``speed=0``) ranks receive empty spans; ``None`` or
+    all-equal speeds keep the homogeneous path bit-identical.
     """
-    return oned.optimal_1d(_cost_prefix(n_blocks, window_blocks), R)
+    return oned.optimal_1d(_cost_prefix(n_blocks, window_blocks), R,
+                           speeds=speeds)
 
 
 def balanced_plan_two_phase(n_blocks: int, R: int, window_blocks: int = 0,
-                            *, G: int | None = None) -> np.ndarray:
+                            *, G: int | None = None,
+                            speeds=None) -> np.ndarray:
     """HYBRID's two-phase shape in 1D: near-optimal contiguous cuts, fast.
 
     Phase 1 cuts the blocks into ``G`` contiguous supergroups (one small
@@ -80,15 +98,27 @@ def balanced_plan_two_phase(n_blocks: int, R: int, window_blocks: int = 0,
     :func:`replan_contiguous` grades under a phase-aware policy, whose
     bottleneck then *warm-seeds* the exact solve when the policy
     escalates to ``'slow'``.
+
+    With heterogeneous ``speeds`` the supergroups are capacity chunks of
+    the rank order (phase 1 cuts blocks proportionally to each chunk's
+    speed sum; phase 2's PROBE-M consumes the per-rank speed schedule),
+    so slow/dead ranks receive proportionally small/empty spans.
     """
     p = _cost_prefix(n_blocks, window_blocks)
+    sp = search.normalize_speeds(speeds, R)
     if G is None:
         G = max((d for d in range(1, int(round(np.sqrt(R))) + 1)
                  if R % d == 0), default=1)
     G = min(G, R)
-    gcuts = oned.optimal_1d(p, G)
+    if sp is None:
+        gcuts = oned.optimal_1d(p, G)
+    else:
+        G = max(min(G, int((sp > 0).sum())), 1)
+        chunk = jagged._speed_chunks(sp, G)
+        gsum = np.add.reduceat(sp, chunk[:-1])
+        gcuts = oned.optimal_1d(p, G, speeds=gsum)
     subs = [p[gcuts[i]:gcuts[i + 1] + 1] - p[gcuts[i]] for i in range(G)]
-    _, _, sub_cuts = oned.nicol_multi(subs, R)
+    _, _, sub_cuts = oned.nicol_multi(subs, R, speeds=sp)
     cuts = [np.zeros(1, dtype=np.int64)]
     for i, cc in enumerate(sub_cuts):
         cuts.append(np.asarray(cc[1:], dtype=np.int64) + int(gcuts[i]))
@@ -112,7 +142,8 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
                       last_migration_volume: float = 0.0,
                       steps_since_replan: int = 1,
                       step: int | None = None,
-                      two_phase: bool = False) -> tuple[np.ndarray, bool]:
+                      two_phase: bool = False,
+                      speeds=None) -> tuple[np.ndarray, bool]:
     """Long-context re-split driven by the rebalance hysteresis policy.
 
     As decoding grows the context from ``prev_cuts[-1]`` to ``n_blocks``
@@ -135,21 +166,31 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
     bisection *warm-seeded* at the two-phase bottleneck (a sound upper
     bound by construction).  A plain ``decide()`` policy under
     ``two_phase=True`` adopts the fast candidate whenever it triggers.
+
+    ``speeds`` (per-rank capacity; see :func:`balanced_plan`) switches
+    every bottleneck in the trigger — the extension's, the candidate's,
+    the ideal — to *relative* load, so a rank that just slowed down
+    (straggler) inflates the excess and trips the replan even when the
+    raw loads did not move.
     """
     prev_cuts = np.asarray(prev_cuts, dtype=np.int64)
     R = len(prev_cuts) - 1
+    sp = search.normalize_speeds(speeds, R)
     p_new = _cost_prefix(n_blocks, window_blocks)
     ext = np.minimum(prev_cuts, n_blocks)
     ext[-1] = n_blocks
-    max_load = oned.max_interval_load(p_new, ext)
+    max_load = _rel_interval_max(p_new, ext, sp)
     if two_phase:
-        cand = balanced_plan_two_phase(n_blocks, R, window_blocks)
+        cand = balanced_plan_two_phase(n_blocks, R, window_blocks,
+                                       speeds=sp)
     else:
-        cand = oned.optimal_1d(p_new, R, warm=max_load)
-    cand_load = oned.max_interval_load(p_new, cand)
+        warm = max_load if np.isfinite(max_load) else None
+        cand = oned.optimal_1d(p_new, R, warm=warm, speeds=sp)
+    cand_load = _rel_interval_max(p_new, cand, sp)
+    denom = float(sp.sum()) if sp is not None else float(R)
     state = StepState(step=step if step is not None else steps_since_replan,
                       max_load=max_load,
-                      ideal=float(p_new[-1]) / R,
+                      ideal=float(p_new[-1]) / denom,
                       total_load=float(p_new[-1]),
                       achieved_at_replan=cand_load,
                       total_at_replan=float(p_new[-1]),
@@ -164,18 +205,22 @@ def replan_contiguous(prev_cuts: np.ndarray, n_blocks: int,
     if mode == "keep":
         return ext, False
     if mode == "slow" and two_phase:
-        cand = oned.optimal_1d(p_new, R, warm=cand_load)
+        cand = oned.optimal_1d(p_new, R, warm=cand_load, speeds=sp)
     return cand, True
 
 
 def plan_imbalance(plan: np.ndarray, n_blocks: int, R: int,
-                   window_blocks: int = 0, contiguous: bool = True) -> float:
+                   window_blocks: int = 0, contiguous: bool = True,
+                   *, speeds=None) -> float:
     """Load imbalance ``Lmax / Lavg - 1`` of a plan (0 == perfect).
 
     ``plan`` is a cut array (length R+1) for contiguous plans, or a
-    block -> rank assignment (length n_blocks) otherwise.
+    block -> rank assignment (length n_blocks) otherwise.  With
+    ``speeds`` both sides go relative: per-rank load over speed against
+    the surviving-capacity average ``total / speeds.sum()``.
     """
     c = block_costs(n_blocks, window_blocks)
+    sp = search.normalize_speeds(speeds, R)
     if contiguous:
         cuts = np.asarray(plan)
         p = _cost_prefix(n_blocks, window_blocks)
@@ -183,7 +228,11 @@ def plan_imbalance(plan: np.ndarray, n_blocks: int, R: int,
     else:
         loads = np.bincount(np.asarray(plan), weights=c.astype(np.float64),
                             minlength=R)
-    avg = float(c.sum()) / R
+    if sp is not None:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            loads = np.where(loads > 0, loads / sp[:loads.size], 0.0)
+    denom = float(sp.sum()) if sp is not None else float(R)
+    avg = float(c.sum()) / denom
     if avg == 0:
         return 0.0
     return float(loads.max(initial=0.0)) / avg - 1.0

@@ -21,7 +21,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import prefix, registry
+from repro.core import prefix, registry, search
 from repro.core.types import Partition
 
 __all__ = ["PlacementPlan", "plan_expert_placement", "simulate_router_counts"]
@@ -60,6 +60,7 @@ class PlacementPlan:
     load_imbalance: float       # Lmax / Lavg - 1 of this plan
     uniform_imbalance: float    # same metric for the uniform default grid
     fell_back: bool = False     # algo lost to the uniform grid; plan is it
+    speeds: np.ndarray | None = None  # per-rank capacities (None = uniform)
 
 
 def _uniform_grid(gamma: np.ndarray, ranks: int) -> Partition:
@@ -72,8 +73,29 @@ def _uniform_grid(gamma: np.ndarray, ranks: int) -> Partition:
                               Q=ranks // P)
 
 
+def _imbalance(part: Partition, gamma: np.ndarray, ranks: int,
+               sp: np.ndarray | None) -> float:
+    """``Lmax / Lavg - 1`` — relative under heterogeneous rank speeds.
+
+    Rectangle order is positional (rank k hosts rectangle k), so rel load
+    is ``load_k / sp[k]``; a *loaded* dead rank costs ``inf`` (its tokens
+    never finish), an empty one costs 0.  The average is over surviving
+    capacity, ``total / sp.sum()``.
+    """
+    if sp is None:
+        return part.load_imbalance(gamma)
+    loads = np.asarray(part.loads(gamma), dtype=np.float64)
+    total = float(loads.sum())
+    if total == 0:
+        return 0.0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / sp[:loads.size], 0.0)
+    return float(rel.max(initial=0.0)) / (total / float(sp.sum())) - 1.0
+
+
 def plan_expert_placement(counts: np.ndarray, ranks: int,
-                          algo: str = "jag-m-heur-probe") -> PlacementPlan:
+                          algo: str = "jag-m-heur-probe", *,
+                          speeds=None) -> PlacementPlan:
     """Cut the (L, E) grid into ``ranks`` balanced rectangles.
 
     ``algo`` is any registry partitioner name; square-only algorithms
@@ -85,12 +107,22 @@ def plan_expert_placement(counts: np.ndarray, ranks: int,
     on adversarial grids), the uniform grid itself is returned with
     ``fell_back=True`` — imbalance <= uniform is an invariant consumers
     may rely on.
+
+    ``speeds`` is a per-rank capacity vector (mixed accelerator
+    generations, degraded hosts): the plan minimizes *relative* load
+    ``tokens_k / speeds[k]``, dead (``speed=0``) ranks host nothing, and
+    both imbalance fields go relative — the uniform grid keeps routing
+    tokens to dead ranks, so with any dead rank its relative imbalance is
+    ``inf`` and the capacity-aware plan never falls back to it.  ``algo``
+    must then be capacity-aware (``registry.CAPACITY_AWARE``).
     """
     counts = np.asarray(counts)
+    sp = search.normalize_speeds(speeds, ranks)
     gamma = prefix.prefix_sum_2d(counts)
-    part = registry.partition(algo, gamma, ranks)
+    part = registry.partition(algo, gamma, ranks, speeds=sp)
     uniform = _uniform_grid(gamma, ranks)
-    li, uli = part.load_imbalance(gamma), uniform.load_imbalance(gamma)
+    li = _imbalance(part, gamma, ranks, sp)
+    uli = _imbalance(uniform, gamma, ranks, sp)
     fell_back = li > uli
     if fell_back:
         part, li = uniform, uli
@@ -102,4 +134,5 @@ def plan_expert_placement(counts: np.ndarray, ranks: int,
         load_imbalance=li,
         uniform_imbalance=uli,
         fell_back=fell_back,
+        speeds=sp,
     )

@@ -175,6 +175,67 @@ class Plan:
             self.row_cuts, [self.stripe_col_cuts(s)
                             for s in range(len(self.counts))], self.shape)
 
+    def validate(self, gamma: np.ndarray | None = None, *,
+                 m: int | None = None) -> "Plan":
+        """Structural check: raise ``ValueError`` on any malformed plan.
+
+        Verifies the cut vectors describe a disjoint cover of the grid —
+        row cuts span ``[0, n1]`` monotonically, every stripe has >= 1
+        interval whose cuts span ``[0, n2]`` monotonically — plus, when
+        given, ``m`` (rectangle count) and ``gamma`` (per-rectangle loads
+        sum to the frame's total: nothing dropped, nothing double-counted).
+        All problems are collected into one message.  Returns ``self`` so
+        call sites can chain.
+        """
+        problems: list[str] = []
+        n1, n2 = self.shape
+        rc = np.asarray(self.row_cuts)
+        ct = np.asarray(self.counts)
+        if rc.ndim != 1 or rc.size != ct.size + 1:
+            problems.append(f"row_cuts shape {rc.shape} does not match "
+                            f"{ct.size} stripes")
+        else:
+            if rc[0] != 0 or rc[-1] != n1:
+                problems.append(f"row cuts span [{rc[0]}, {rc[-1]}], "
+                                f"expected [0, {n1}]")
+            if (np.diff(rc) < 0).any():
+                problems.append(f"row cuts not monotone: {rc.tolist()}")
+        if (ct < 1).any():
+            problems.append(f"every stripe needs >= 1 interval, "
+                            f"counts={ct.tolist()}")
+        elif self.col_cuts.shape[0] != ct.size \
+                or self.col_cuts.shape[1] < int(ct.max(initial=0)) + 1:
+            problems.append(f"col_cuts shape {self.col_cuts.shape} too "
+                            f"small for counts {ct.tolist()}")
+        else:
+            for s in range(ct.size):
+                cc = self.stripe_col_cuts(s)
+                if cc[0] != 0 or cc[-1] != n2:
+                    problems.append(f"stripe {s} col cuts span "
+                                    f"[{cc[0]}, {cc[-1]}], "
+                                    f"expected [0, {n2}]")
+                if (np.diff(cc) < 0).any():
+                    problems.append(f"stripe {s} col cuts not monotone: "
+                                    f"{cc.tolist()}")
+        if m is not None and not problems and self.m != m:
+            problems.append(f"plan has {self.m} rectangles, expected {m}")
+        if gamma is not None and not problems:
+            ga = np.asarray(gamma)
+            if ga.shape != (n1 + 1, n2 + 1):
+                problems.append(f"gamma shape {ga.shape} does not match "
+                                f"the plan's {(n1 + 1, n2 + 1)} prefix "
+                                f"table")
+            else:
+                total = float(ga[-1, -1])
+                got = float(self.loads(ga).sum())
+                if not np.isclose(got, total, rtol=1e-9, atol=1e-6):
+                    problems.append(f"rectangle loads sum to {got}, frame "
+                                    f"total is {total} (lost or "
+                                    f"double-counted cells)")
+        if problems:
+            raise ValueError("invalid Plan: " + "; ".join(problems))
+        return self
+
 
 def unstack_plans(batched, shape: tuple[int, int]) -> list[Plan]:
     """Split a ``plan_stream``/``jag_m_heur_batch`` pytree into T Plans.

@@ -55,6 +55,29 @@ __all__ = ["ingest_stage", "sat_stage", "partition_stage", "plan_frames",
 _DEFAULT_SLICES = 4
 
 
+def _check_finite(frames, t0: int, t1: int, *, what: str) -> None:
+    """Refuse NaN/inf frames *before* they reach the device pipeline.
+
+    A poisoned frame does not crash the partitioner — NaNs propagate
+    through the SAT scan and the device bisection silently produces
+    garbage cuts for every frame sharing the slice — so ingest is the
+    one place the corruption is still attributable.  Names the offending
+    absolute time-steps and the slice they were batched into.
+    """
+    arr = np.asarray(frames)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return  # integer loads cannot encode NaN/inf
+    bad = ~np.isfinite(arr.reshape(arr.shape[0], -1)).all(axis=1)
+    if bad.any():
+        steps = (t0 + np.flatnonzero(bad)).tolist()
+        shown = ", ".join(map(str, steps[:8]))
+        more = f" (+{len(steps) - 8} more)" if len(steps) > 8 else ""
+        raise ValueError(
+            f"{what}: non-finite load frame(s) at step(s) {shown}{more} "
+            f"in [{t0}, {t1}) — NaN/inf would silently corrupt every cut "
+            f"in this slice; clean or drop the frames before planning")
+
+
 # ---------------------------------------------------------------------------
 # stages (pure jnp, unjitted — composed under exactly one jit boundary)
 
@@ -169,6 +192,7 @@ def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
     """
     from repro.rebalance import batch_device
     frames = jnp.asarray(frames)
+    _check_finite(frames, 0, frames.shape[0], what="plan_stream")
     if mesh is None:
         return batch_device.plan_stream(
             frames, P=P, m=m, k=k, rounds=rounds, gamma_dtype=gamma_dtype,
@@ -215,8 +239,9 @@ def iter_plan_slices(frames, *, P: int, m: int, mesh=None,
         slice_size = max(D, -(-T // _DEFAULT_SLICES))
     slice_size = -(-slice_size // D) * D
     pending = []
-    for t0 in range(0, T, slice_size):
+    for i, t0 in enumerate(range(0, T, slice_size)):
         t1 = min(t0 + slice_size, T)
+        _check_finite(frames[t0:t1], t0, t1, what=f"planner slice {i}")
         pending.append((t0, t1, plan_stream(
             frames[t0:t1], P=P, m=m, mesh=mesh, k=k, rounds=rounds,
             gamma_dtype=gamma_dtype, use_pallas=use_pallas,

@@ -22,7 +22,8 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["StepState", "NeverRebalance", "AlwaysRebalance", "EveryK",
-           "HysteresisPolicy", "TwoPhaseHysteresis", "replan_mode"]
+           "HysteresisPolicy", "TwoPhaseHysteresis",
+           "FaultAwareHysteresis", "replan_mode"]
 
 
 def replan_mode(policy, state: "StepState") -> str:
@@ -55,6 +56,8 @@ class StepState:
     last_migration_volume: float  # weight moved at the last replan (0 at t=0)
     alpha: float                  # runtime's cost per unit migrated weight
     replan_overhead: float        # runtime's fixed cost per replan
+    capacity_changed: bool = False  # a fault event (fail/straggle/recover)
+    #                               landed on this step (see rebalance.faults)
 
     @property
     def expected_fresh(self) -> float:
@@ -135,3 +138,27 @@ class TwoPhaseHysteresis(HysteresisPolicy):
             return "keep"
         return "slow" if state.excess > self.slow_band * state.ideal \
             else "fast"
+
+
+@dataclasses.dataclass
+class FaultAwareHysteresis(HysteresisPolicy):
+    """Hysteresis with fault escalation (``rebalance.faults``).
+
+    Any capacity-change event — failure, straggler, recovery — triggers an
+    immediate replan, bypassing the dead-band and payback test: the
+    drift-scaled excess estimate extrapolates from a world whose capacity
+    no longer exists, so riding it out is never the right call.  (The
+    runtime already *forces* a degraded replan on outright failures for
+    every policy; this class additionally escalates on stragglers and
+    recoveries.)  Ordinary drift keeps the inherited hysteresis trigger.
+    """
+
+    def decide(self, state: StepState) -> bool:
+        if state.capacity_changed:
+            return True
+        return super().decide(state)
+
+    def mode(self, state: StepState) -> str:
+        if state.capacity_changed:
+            return "slow"  # capacity steps are rare: buy the good plan
+        return "fast" if self.decide(state) else "keep"

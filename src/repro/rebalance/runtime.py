@@ -24,10 +24,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import prefix
+from repro.core import prefix, search
 
 from . import batch_device, migrate, planner
-from .policy import StepState
+from .policy import StepState, replan_mode
 
 __all__ = ["StepRecord", "RunResult", "plan_stream_host", "run_stream",
            "compare_policies"]
@@ -40,7 +40,9 @@ class StepRecord:
     ideal: float             # total / m
     replanned: bool
     migration_volume: float  # weight moved this step (0 unless replanned)
-    migration_cost: float    # alpha * volume + overhead (0 unless replanned)
+    migration_cost: float    # alpha * (volume + evacuation) + overhead
+    evacuation_volume: float = 0.0  # weight pulled off dead parts this step
+    forced: bool = False     # a failure forced this replan (policy bypassed)
 
 
 @dataclasses.dataclass
@@ -65,6 +67,14 @@ class RunResult:
         return sum(r.replanned for r in self.records[1:])  # t=0 is free
 
     @property
+    def n_forced(self) -> int:
+        return sum(r.forced for r in self.records)
+
+    @property
+    def evacuation_volume(self) -> float:
+        return sum(r.evacuation_volume for r in self.records)
+
+    @property
     def mean_imbalance(self) -> float:
         lis = [r.max_load / r.ideal - 1.0 for r in self.records
                if r.ideal > 0]
@@ -87,12 +97,23 @@ def plan_stream_host(frames: np.ndarray, *, P: int, m: int, k: int = 8,
         gamma_dtype=gamma_dtype, mesh=planner.resolve_mesh(mesh, devices))
 
 
+def _rel_max(plan: batch_device.Plan, g: np.ndarray, sp) -> float:
+    """Plan bottleneck on ``g``: raw load, or relative load under hetero
+    speeds (a loaded dead part costs ``inf`` — its work never finishes)."""
+    if sp is None:
+        return plan.max_load(g)
+    loads = np.asarray(plan.loads(g), dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / sp[:loads.size], 0.0)
+    return float(rel.max(initial=0.0))
+
+
 def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                alpha: float = 1.0, replan_overhead: float = 0.0,
                weight: str = "load", plans=None,
                gammas: list[np.ndarray] | None = None, k: int = 8,
-               rounds: int = 8, mesh=None,
-               devices: int | None = None) -> RunResult:
+               rounds: int = 8, mesh=None, devices: int | None = None,
+               faults=None, validate: bool = False) -> RunResult:
     """Drive one policy over a (T, n1, n2) stream.
 
     weight: "load" charges migration by the moved cells' current load
@@ -107,6 +128,25 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
     ``plans``) when replaying the same stream under several policies —
     see :func:`compare_policies`.  When omitted they are built per step,
     keeping the loop lazy.
+
+    ``faults`` is an optional :class:`repro.rebalance.faults.FaultSchedule`.
+    While any processor runs degraded, bottlenecks are *relative* loads
+    (``load_i / speed_i``; a loaded dead part costs ``inf``) against the
+    surviving-capacity ideal, and candidate plans come from the
+    capacity-aware host planner (:func:`repro.rebalance.faults
+    .capacity_plan`) instead of the homogeneous device stream.  An
+    outright failure *forces* an immediate degraded replan whatever the
+    policy says (the active plan still routes work to a dead part);
+    stragglers and recoveries only set ``StepState.capacity_changed`` and
+    let the policy's :func:`~repro.rebalance.policy.replan_mode` grade
+    keep/fast/slow.  Every replan additionally charges
+    ``alpha * evacuation_volume`` — the weight pulled off dead parts
+    (``migrate.migration_matrix`` rows), which is paid on top of ordinary
+    migration because a dead machine's state must be recovered rather
+    than copied.
+
+    ``validate=True`` runs :meth:`batch_device.Plan.validate` on every
+    adopted plan (coverage/monotonicity/load-conservation).
     """
     if weight not in ("load", "cells"):
         raise ValueError(f"weight must be 'load' or 'cells', got {weight!r}")
@@ -115,6 +155,11 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
         plans = planner.plan_iter(frames, P=P, m=m, k=k, rounds=rounds,
                                   mesh=planner.resolve_mesh(mesh, devices))
     plan_it = iter(plans)
+    if faults is not None:
+        from . import faults as faults_mod
+        if faults.m != m:
+            raise ValueError(f"fault schedule is for m={faults.m}, "
+                             f"run_stream got m={m}")
 
     def next_plan(t: int) -> batch_device.Plan:
         # a bare StopIteration would read as normal termination to any
@@ -130,40 +175,73 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
         return gammas[t] if gammas is not None \
             else prefix.prefix_sum_2d(frames[t])
 
+    def speeds_state(t: int):
+        """(normalized speeds | None, ideal denominator, events at t)."""
+        if faults is None:
+            return None, float(m), []
+        raw = faults.speeds_at(t)
+        sp = search.normalize_speeds(raw, m)
+        denom = float(raw.sum()) if sp is not None else float(m)
+        return sp, denom, faults.events_at(t)
+
     records: list[StepRecord] = []
     active = next_plan(0)
     g0 = frame_gamma(0)
-    achieved = active.max_load(g0)
+    sp, denom, _ = speeds_state(0)
+    if sp is not None:
+        active = faults_mod.capacity_plan(g0, P=P, m=m, speeds=sp,
+                                          optimal=True)
+    if validate:
+        active.validate(g0, m=m)
+    achieved = _rel_max(active, g0, sp)
     total_at_replan = float(g0[-1, -1])
     steps_since = 0
     last_volume = 0.0
-    records.append(StepRecord(0, achieved, total_at_replan / m, True,
+    records.append(StepRecord(0, achieved, total_at_replan / denom, True,
                               0.0, 0.0))
     for t in range(1, len(frames)):
         candidate = next_plan(t)
         g = frame_gamma(t)
         total = float(g[-1, -1])
-        cur_ml = active.max_load(g)
+        sp, denom, events = speeds_state(t)
+        cur_ml = _rel_max(active, g, sp)
         steps_since += 1
-        state = StepState(step=t, max_load=cur_ml, ideal=total / m,
+        ideal = total / denom
+        state = StepState(step=t, max_load=cur_ml, ideal=ideal,
                           total_load=total, achieved_at_replan=achieved,
                           total_at_replan=total_at_replan,
                           steps_since_replan=steps_since,
                           last_migration_volume=last_volume, alpha=alpha,
-                          replan_overhead=replan_overhead)
-        if policy.decide(state):
+                          replan_overhead=replan_overhead,
+                          capacity_changed=bool(events))
+        forced = any(e.kind == "fail" for e in events)
+        mode = "slow" if forced else replan_mode(policy, state)
+        if forced or mode != "keep":
+            if sp is not None:
+                candidate = faults_mod.capacity_plan(
+                    g, P=P, m=m, speeds=sp,
+                    optimal=forced or mode == "slow")
             w = frames[t] if weight == "load" else None
             vol = migrate.migration_volume(active, candidate, weights=w)
-            cost = replan_overhead + alpha * vol
+            evac = 0.0
+            if faults is not None:
+                dead = faults.failed_at(t)
+                if dead.size:
+                    flow = migrate.migration_matrix(active, candidate,
+                                                    weights=w)
+                    evac = float(flow[dead, :].sum())
+            cost = replan_overhead + alpha * (vol + evac)
             active = candidate
-            achieved = active.max_load(g)
+            if validate:
+                active.validate(g, m=m)
+            achieved = _rel_max(active, g, sp)
             total_at_replan = total
             steps_since = 0
             last_volume = vol
-            records.append(StepRecord(t, achieved, total / m, True, vol,
-                                      cost))
+            records.append(StepRecord(t, achieved, ideal, True, vol,
+                                      cost, evac, forced))
         else:
-            records.append(StepRecord(t, cur_ml, total / m, False, 0.0,
+            records.append(StepRecord(t, cur_ml, ideal, False, 0.0,
                                       0.0))
     return RunResult(records, active)
 
@@ -171,13 +249,15 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
 def compare_policies(frames: np.ndarray, policies: dict, *, P: int, m: int,
                      alpha: float = 1.0, replan_overhead: float = 0.0,
                      weight: str = "load", k: int = 8, rounds: int = 8,
-                     mesh=None,
-                     devices: int | None = None) -> dict[str, RunResult]:
+                     mesh=None, devices: int | None = None, faults=None,
+                     validate: bool = False) -> dict[str, RunResult]:
     """Run several policies over shared precomputed plans and gammas.
 
     The plans are materialized once (replayed per policy), but still
     arrive through the lazy slice iterator: the first policy's gamma
-    precompute overlaps with the tail slices' planning.
+    precompute overlaps with the tail slices' planning.  ``faults`` /
+    ``validate`` pass through to :func:`run_stream` (every policy sees
+    the same fault schedule).
     """
     frames = np.asarray(frames)
     mesh = planner.resolve_mesh(mesh, devices)
@@ -188,5 +268,6 @@ def compare_policies(frames: np.ndarray, policies: dict, *, P: int, m: int,
     plans = ([] if first is None else [first]) + list(plan_it)
     return {name: run_stream(frames, pol, P=P, m=m, alpha=alpha,
                              replan_overhead=replan_overhead, weight=weight,
-                             plans=plans, gammas=gammas)
+                             plans=plans, gammas=gammas, faults=faults,
+                             validate=validate)
             for name, pol in policies.items()}

@@ -16,7 +16,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import oned
+from repro.core import oned, search
 
 
 @dataclasses.dataclass
@@ -35,24 +35,47 @@ class Assignment:
         return sum(r.prompt_tokens for r in self.requests)
 
 
+def _direct_cut_speeds(p: np.ndarray, sp: np.ndarray) -> np.ndarray:
+    """Capacity-proportional DirectCut: replica i's range ends where the
+    token prefix crosses its share of ``total * sp[:i+1].sum() / sp.sum()``
+    (dead replicas get empty ranges)."""
+    total = float(p[-1])
+    targets = total * np.cumsum(sp[:-1]) / float(sp.sum())
+    inner = np.searchsorted(p, targets, side="left")
+    cuts = np.concatenate([[0], inner, [len(p) - 1]])
+    return np.maximum.accumulate(cuts).astype(np.int64)
+
+
 def plan(requests: list[Request], n_replicas: int, *,
          algo: str = "optimal", sort: bool = True,
-         warm: float | None = None) -> list[Assignment]:
+         warm: float | None = None, speeds=None) -> list[Assignment]:
     """Partition requests into per-replica groups minimizing the max load.
 
     ``warm`` seeds the optimal path's bisection with a bottleneck from a
     prior plan (see :func:`replan`); it never changes the resulting cuts.
+
+    ``speeds`` is an optional per-replica capacity vector (mixed
+    hardware, or measured progress rates under straggling): the optimal
+    path minimizes the *relative* bottleneck ``tokens_i / speeds[i]``
+    via the shared capacity-aware engine, the direct path cuts
+    capacity-proportional ranges, and dead (``speed=0``) replicas
+    receive no requests.  ``rb`` has no capacity-aware form and raises.
     """
+    sp = search.normalize_speeds(speeds, n_replicas)
     reqs = sorted(requests, key=lambda r: r.prompt_tokens, reverse=True) \
         if sort else list(requests)
     loads = np.array([r.prompt_tokens for r in reqs], dtype=np.int64)
     p = np.concatenate([[0], np.cumsum(loads)])
     if algo == "direct":
-        cuts = oned.direct_cut(p, n_replicas)
+        cuts = oned.direct_cut(p, n_replicas) if sp is None \
+            else _direct_cut_speeds(p, sp)
     elif algo == "rb":
+        if sp is not None:
+            raise ValueError("algo='rb' has no capacity-aware form; use "
+                             "'optimal' or 'direct' with speeds")
         cuts = oned.recursive_bisection(p, n_replicas)
     else:
-        cuts = oned.optimal_1d(p, n_replicas, warm=warm)
+        cuts = oned.optimal_1d(p, n_replicas, warm=warm, speeds=sp)
     out = []
     for i in range(n_replicas):
         out.append(Assignment(i, reqs[int(cuts[i]):int(cuts[i + 1])]))
@@ -142,12 +165,21 @@ def imbalance(assignments: list[Assignment]) -> float:
 
 
 def straggler_rebalance(assignments: list[Assignment],
-                        progress: list[float]) -> list[Assignment]:
+                        progress: list[float], *,
+                        speeds=None) -> list[Assignment]:
     """Straggler mitigation: replicas report progress in [0, 1]; remaining
-    work is re-partitioned over all replicas (work stealing via the same
-    1D optimal partitioner)."""
+    work is re-partitioned over all replicas via the capacity-aware 1D
+    optimal partitioner.
+
+    ``speeds=None`` redistributes equally (the straggler is assumed
+    transient).  Passing per-replica capacities — e.g. the measured
+    progress rates themselves, when the slowdown is expected to persist —
+    gives slow replicas proportionally less of the remaining work and a
+    dead (``speed=0``) replica none, so one failed replica no longer
+    re-straggles the rebalanced batch.
+    """
     remaining: list[Request] = []
     for a, prog in zip(assignments, progress):
         keep = int(len(a.requests) * prog)
         remaining.extend(a.requests[keep:])
-    return plan(remaining, len(assignments))
+    return plan(remaining, len(assignments), speeds=speeds)

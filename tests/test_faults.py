@@ -1,0 +1,212 @@
+"""Fault injection (repro.rebalance.faults) + runtime robustness tests."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import prefix
+from repro.rebalance import batch_device, faults, planner, policy, \
+    runtime, stream
+
+
+def _frames(T=12, n=16, seed=0):
+    return stream.drifting_hotspot(T, n, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def test_fault_schedule_speeds_at():
+    m = 6
+    s = faults.FaultSchedule(m, [
+        faults.FaultEvent(3, 1, "fail"),
+        faults.FaultEvent(5, 4, "straggle", speed=0.25),
+        faults.FaultEvent(8, 1, "recover"),
+    ])
+    assert np.array_equal(s.speeds_at(2), np.ones(m))
+    assert s.speeds_at(3)[1] == 0.0
+    assert s.speeds_at(5)[4] == 0.25
+    assert s.speeds_at(8)[1] == 1.0 and s.speeds_at(8)[4] == 0.25
+    assert list(s.failed_at(4)) == [1]
+    assert list(s.failed_at(9)) == []
+    assert [e.kind for e in s.events_at(5)] == ["straggle"]
+
+
+def test_fault_schedule_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        faults.FaultSchedule(4, [faults.FaultEvent(0, 7, "fail")])
+    with pytest.raises(ValueError, match="dead"):
+        faults.FaultSchedule(2, [faults.FaultEvent(1, 0, "fail"),
+                                 faults.FaultEvent(2, 1, "fail")])
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultEvent(0, 0, "nope")
+    with pytest.raises(ValueError, match="speed"):
+        faults.FaultEvent(0, 0, "straggle", speed=0.0)
+
+
+def test_generators_deterministic_per_seed():
+    """Same seed -> bit-identical streams and fault schedules."""
+    for name, gen in stream.STREAMS.items():
+        a, b = gen(6, 12, 12, seed=3), gen(6, 12, 12, seed=3)
+        np.testing.assert_array_equal(a, b, err_msg=name)
+        c = gen(6, 12, 12, seed=4)
+        assert not np.array_equal(a, c), name
+    for name, gen in faults.FAULT_SCENARIOS.items():
+        assert gen(32, 8, seed=5) == gen(32, 8, seed=5), name
+    assert faults.random_failures(32, 8, seed=1) \
+        != faults.random_failures(32, 8, seed=2)
+
+
+def test_scenario_generators_shape():
+    s = faults.random_failures(40, 10, n_failures=2, n_straggles=1, seed=0)
+    kinds = [e.kind for e in s.events]
+    assert kinds.count("fail") == 2 and kinds.count("straggle") == 1
+    assert kinds.count("recover") == 1
+    r = faults.rack_failure(40, 10, rack_size=3, fail_at=11, recover_at=30,
+                            seed=0)
+    assert len(r.failed_at(11)) == 3
+    assert len(r.failed_at(30)) == 0
+    with pytest.raises(ValueError):
+        faults.rack_failure(40, 4, rack_size=4)
+
+
+# ---------------------------------------------------------------------------
+# capacity_plan + Plan.validate
+
+
+def test_capacity_plan_homogeneous_and_hetero():
+    f = _frames(T=1)[0]
+    g = prefix.prefix_sum_2d(f)
+    m, P = 8, 3
+    plan = faults.capacity_plan(g, P=P, m=m).validate(g, m=m)
+    assert np.isclose(plan.loads(g).sum(), g[-1, -1])
+    sp = np.ones(m)
+    sp[2] = 0.0
+    sp[6] = 0.5
+    hp = faults.capacity_plan(g, P=P, m=m, speeds=sp).validate(g, m=m)
+    assert hp.loads(g)[2] == 0.0
+    fast = faults.capacity_plan(g, P=P, m=m, speeds=sp,
+                                optimal=False).validate(g, m=m)
+    assert fast.loads(g)[2] == 0.0
+
+
+def test_plan_validate_rejects_malformed():
+    f = _frames(T=1)[0]
+    g = prefix.prefix_sum_2d(f)
+    plan = faults.capacity_plan(g, P=3, m=8)
+    bad_rows = batch_device.Plan(plan.row_cuts + 1, plan.counts,
+                                 plan.col_cuts, plan.shape)
+    with pytest.raises(ValueError, match="row cuts span"):
+        bad_rows.validate()
+    bad_cols = batch_device.Plan(plan.row_cuts, plan.counts,
+                                 plan.col_cuts[:, ::-1].copy(), plan.shape)
+    with pytest.raises(ValueError, match="invalid Plan"):
+        bad_cols.validate()
+    with pytest.raises(ValueError, match="rectangles"):
+        plan.validate(m=9)
+    with pytest.raises(ValueError, match="gamma shape"):
+        plan.validate(np.zeros((5, 5)))  # plan is for a 16x16 grid
+    nan_g = g.astype(np.float64).copy()
+    nan_g[-1, -1] = np.nan  # always gathered by the last rectangle
+    with pytest.raises(ValueError, match="loads sum"):
+        plan.validate(nan_g)
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+
+
+def test_failure_forces_replan_and_evacuates():
+    T, n, P, m = 10, 16, 3, 8
+    frames = _frames(T=T, n=n)
+    sched = faults.FaultSchedule(m, [faults.FaultEvent(4, 2, "fail")])
+    res = runtime.run_stream(frames, policy.NeverRebalance(), P=P, m=m,
+                             alpha=0.5, replan_overhead=2.0, faults=sched,
+                             validate=True)
+    # even NeverRebalance is forced off the dead part
+    forced = [r for r in res.records if r.forced]
+    assert [r.step for r in forced] == [4]
+    assert forced[0].replanned and forced[0].evacuation_volume > 0
+    assert res.evacuation_volume == forced[0].evacuation_volume
+    assert all(np.isfinite(r.max_load) for r in res.records)
+    g_last = prefix.prefix_sum_2d(frames[-1])
+    assert res.final_plan.loads(g_last)[2] == 0.0
+
+
+def test_straggler_is_graded_not_forced():
+    T, n, P, m = 8, 16, 3, 8
+    frames = _frames(T=T, n=n)
+    sched = faults.FaultSchedule(m, [
+        faults.FaultEvent(3, 1, "straggle", speed=0.25)])
+    res = runtime.run_stream(frames, policy.NeverRebalance(), P=P, m=m,
+                             faults=sched, validate=True)
+    assert res.n_forced == 0          # stragglers never force
+    assert res.n_replans == 0         # Never keeps riding the stale plan
+    # but the fault-aware policy escalates on the capacity change
+    res2 = runtime.run_stream(frames, policy.FaultAwareHysteresis(), P=P,
+                              m=m, faults=sched, validate=True)
+    assert any(r.replanned for r in res2.records if r.step == 3)
+
+
+def test_recovery_returns_to_device_plans():
+    T, n, P, m = 10, 16, 3, 8
+    frames = _frames(T=T, n=n)
+    sched = faults.FaultSchedule(m, [faults.FaultEvent(3, 0, "fail"),
+                                     faults.FaultEvent(6, 0, "recover")])
+    res = runtime.run_stream(frames, policy.FaultAwareHysteresis(), P=P,
+                             m=m, faults=sched, validate=True)
+    g_last = prefix.prefix_sum_2d(frames[-1])
+    # after recovery the plan uses all m parts again
+    assert res.final_plan.loads(g_last)[0] > 0
+
+
+def test_fault_aware_hysteresis_beats_baselines():
+    T, n, P, m = 16, 24, 3, 8
+    frames = _frames(T=T, n=n, seed=1)
+    sched = faults.FaultSchedule(m, [faults.FaultEvent(T // 2, 3, "fail")])
+    res = runtime.compare_policies(
+        frames,
+        {"never": policy.NeverRebalance(),
+         "always": policy.AlwaysRebalance(),
+         "hyst": policy.FaultAwareHysteresis()},
+        P=P, m=m, alpha=0.25, replan_overhead=500.0, faults=sched,
+        validate=True)
+    hyst = res["hyst"].total_cost
+    assert hyst < res["never"].total_cost
+    assert hyst < res["always"].total_cost
+    assert all(np.isfinite(r.max_load) for r in res["hyst"].records)
+
+
+def test_run_stream_rejects_mismatched_schedule():
+    frames = _frames(T=4)
+    sched = faults.FaultSchedule(4, [])
+    with pytest.raises(ValueError, match="m="):
+        runtime.run_stream(frames, policy.NeverRebalance(), P=2, m=8,
+                           faults=sched)
+
+
+# ---------------------------------------------------------------------------
+# planner ingest guard
+
+
+def test_planner_rejects_poisoned_slice():
+    frames = _frames(T=8).astype(np.float32)
+    frames[5, 3, 3] = np.nan
+    with pytest.raises(ValueError, match=r"step\(s\) 5"):
+        list(planner.iter_plan_slices(frames, P=2, m=4, slice_size=4))
+    with pytest.raises(ValueError, match="plan_stream"):
+        planner.plan_stream(frames, P=2, m=4)
+    frames[5, 3, 3] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        planner.plan_stream(frames, P=2, m=4)
+    # integer frames cannot be poisoned — must not raise
+    ok = _frames(T=4)
+    list(planner.iter_plan_slices(ok, P=2, m=4))
+
+
+def test_poisoned_slice_names_slice_and_range():
+    frames = _frames(T=8).astype(np.float64)
+    frames[6] = np.nan
+    with pytest.raises(ValueError, match=r"planner slice 1.*\[4, 8\)"):
+        list(planner.iter_plan_slices(frames, P=2, m=4, slice_size=4))

@@ -13,7 +13,11 @@ P, M = 4, 12
 
 def _plans(frames):
     batched = batch_device.plan_stream(jnp.asarray(frames), P=P, m=M)
-    return batch_device.unstack_plans(batched, frames.shape[1:])
+    plans = batch_device.unstack_plans(batched, frames.shape[1:])
+    # every device plan must pass the structural validator
+    for t, pl in enumerate(plans):
+        pl.validate(prefix.prefix_sum_2d(frames[t]), m=M)
+    return plans
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,208 @@
+"""Heterogeneous-capacity (``speeds=``) engine tests.
+
+Two invariants anchor the feature:
+
+- **Ones bit-identity** — ``speeds=None`` and ``speeds=np.ones(m)`` (any
+  uniform vector) take the *same* homogeneous code path, so cuts and
+  bottlenecks are bit-identical across the whole registry.
+- **Relative-load optimality** — the heterogeneous 1D solve minimizes
+  ``max(load_i / speeds[i])`` over the fixed processor order exactly
+  (brute-force checked), and dead (``speed=0``) positions always receive
+  empty intervals.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import oned, prefix, registry, search
+
+# all capacity-aware names, deterministic order
+AWARE = sorted(registry.CAPACITY_AWARE)
+
+
+def _rel_bottleneck(loads: np.ndarray, speeds: np.ndarray) -> float:
+    loads = np.asarray(loads, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / speeds[:loads.size], 0.0)
+    return float(rel.max(initial=0.0))
+
+
+def test_normalize_speeds():
+    assert search.normalize_speeds(None, 4) is None
+    assert search.normalize_speeds(np.ones(4), 4) is None
+    assert search.normalize_speeds([2.0, 2.0, 2.0], 3) is None  # uniform
+    sp = search.normalize_speeds([1.0, 0.5, 0.0], 3)
+    assert sp is not None and sp.dtype == np.float64
+    with pytest.raises(ValueError):
+        search.normalize_speeds([1.0, 2.0], 3)         # wrong length
+    with pytest.raises(ValueError):
+        search.normalize_speeds([1.0, -1.0], 2)        # negative
+    with pytest.raises(ValueError):
+        search.normalize_speeds([0.0, 0.0], 2)         # all dead
+    with pytest.raises(ValueError):
+        search.normalize_speeds([1.0, np.nan], 2)      # non-finite
+
+
+def test_registry_ones_bit_identical():
+    """speeds=np.ones(m) must produce bit-identical plans to speeds=None
+    for every algorithm in the registry (uniform speeds normalize away
+    before any dispatch, per-orientation tie-breaks included)."""
+    rng = np.random.default_rng(1104)
+    for case in range(10):
+        n1, n2 = int(rng.integers(2, 10)), int(rng.integers(2, 10))
+        A = rng.integers(0, 50, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(1, 10))
+        sq = int(round(np.sqrt(m)))
+        for name in registry.names():
+            if (name.startswith(("rect", "jag-pq")) and sq * sq != m):
+                continue  # square-only algorithms
+            base = registry.partition(name, g, m)
+            ones = registry.partition(name, g, m, speeds=np.ones(m))
+            half = registry.partition(name, g, m,
+                                      speeds=np.full(m, 0.5))
+            for other in (ones, half):
+                assert other.rects == base.rects, (name, case)
+                assert other.max_load(g) == base.max_load(g), (name, case)
+
+
+def test_registry_rejects_non_aware_hetero():
+    A = np.arange(12, dtype=np.int64).reshape(3, 4)
+    g = prefix.prefix_sum_2d(A)
+    sp = np.array([1.0, 0.5, 1.0, 1.0])
+    with pytest.raises(ValueError, match="does not support heterogeneous"):
+        registry.partition("hier-rb", g, 4, speeds=sp)
+    # uniform speeds are fine everywhere
+    registry.partition("hier-rb", g, 4, speeds=np.ones(4))
+
+
+def test_optimal_1d_hetero_matches_brute_force():
+    """The hetero bisection is exact for the fixed processor order:
+    brute-force every cut placement on small instances."""
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        n = int(rng.integers(1, 8))
+        m = int(rng.integers(1, 4))
+        loads = rng.integers(0, 20, n).astype(np.int64)
+        p = np.concatenate([[0], np.cumsum(loads)])
+        speeds = rng.choice([0.0, 0.25, 0.5, 1.0, 2.0], size=m)
+        if not (speeds > 0).any():
+            speeds[rng.integers(0, m)] = 1.0
+        cuts = oned.optimal_1d(p, m, speeds=speeds)
+        got = _rel_bottleneck(p[cuts[1:]] - p[cuts[:-1]], speeds)
+        best = np.inf
+        for inner in itertools.combinations_with_replacement(
+                range(n + 1), m - 1):
+            cand = np.array((0,) + inner + (n,))
+            if (np.diff(cand) < 0).any():
+                continue
+            best = min(best,
+                       _rel_bottleneck(p[cand[1:]] - p[cand[:-1]], speeds))
+        assert got <= best * (1 + 1e-9) + 1e-12, (loads, speeds, cuts)
+        assert got >= best * (1 - 1e-9) - 1e-12, (loads, speeds, cuts)
+
+
+def test_dead_positions_get_empty_intervals():
+    rng = np.random.default_rng(11)
+    for _ in range(25):
+        n = int(rng.integers(2, 40))
+        m = int(rng.integers(2, 9))
+        loads = rng.integers(1, 30, n).astype(np.int64)
+        p = np.concatenate([[0], np.cumsum(loads)])
+        speeds = np.ones(m)
+        dead = rng.choice(m, size=int(rng.integers(1, m)), replace=False)
+        speeds[dead] = 0.0
+        cuts = oned.optimal_1d(p, m, speeds=speeds)
+        seg = p[cuts[1:]] - p[cuts[:-1]]
+        assert (seg[dead] == 0).all(), (speeds, cuts)
+        assert cuts[-1] == n  # still a full cover
+
+
+def test_packed_counts_speeds_match_scalar_probe_count():
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        n = int(rng.integers(1, 30))
+        S = int(rng.integers(1, 5))
+        cap = int(rng.integers(1, 9))
+        rows = [np.concatenate([[0], np.cumsum(
+            rng.integers(0, 25, n).astype(np.int64))]) for _ in range(S)]
+        speeds = rng.choice([0.0, 0.5, 1.0, 3.0], size=cap)
+        if not (speeds > 0).any():
+            speeds[0] = 1.0
+        packed = search.PackedPrefixes(np.asarray(rows))
+        Ls = rng.uniform(1.0, float(max(r[-1] for r in rows)) + 1.0,
+                         size=3)
+        got = packed.counts(Ls, cap, speeds=speeds)
+        want = [[oned.probe_count(r, float(L), cap, speeds=speeds)
+                 for L in Ls] for r in rows]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_capacity_aware_sweep_valid_and_dead_free():
+    """Every capacity-aware algorithm under mixed speeds: exact tiling,
+    zero load on dead parts, finite relative bottleneck."""
+    rng = np.random.default_rng(21)
+    for case in range(8):
+        n1, n2 = int(rng.integers(3, 12)), int(rng.integers(3, 12))
+        A = rng.integers(0, 50, (n1, n2)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        m = int(rng.integers(4, 10))
+        sq = int(round(np.sqrt(m)))
+        speeds = rng.choice([0.25, 0.5, 1.0, 2.0], size=m)
+        speeds[int(rng.integers(0, m))] = 0.0
+        for name in AWARE:
+            if name.startswith("jag-pq") and sq * sq != m:
+                continue
+            part = registry.partition(name, g, m, speeds=speeds)
+            assert part.m == m, (name, case)
+            paint = np.zeros((n1, n2), dtype=np.int32)
+            for r in part.rects:
+                paint[r.r0:r.r1, r.c0:r.c1] += 1
+            assert (paint == 1).all(), (name, case)
+            loads = np.asarray(part.loads(g), dtype=np.float64)
+            assert (loads[speeds == 0.0] == 0).all(), (name, case)
+            assert np.isfinite(_rel_bottleneck(loads, speeds)), (name, case)
+
+
+def test_consumer_speeds():
+    from repro.dist import cp_balance, moe_placement
+    from repro.serve import batcher
+
+    # cp_balance: ones identity + dead rank empty
+    R = 8
+    base = cp_balance.balanced_plan(64, R)
+    assert np.array_equal(base,
+                          cp_balance.balanced_plan(64, R,
+                                                   speeds=np.ones(R)))
+    sp = np.array([1, 1, 0, 1, 0.5, 1, 1, 1], dtype=np.float64)
+    cuts = cp_balance.balanced_plan(64, R, speeds=sp)
+    p = np.concatenate([[0], np.cumsum(cp_balance.block_costs(64))])
+    assert (p[cuts[3]] - p[cuts[2]]) == 0
+    assert np.isfinite(cp_balance.plan_imbalance(cuts, 64, R, speeds=sp))
+
+    # moe: capacity-aware plan never falls back to a dead-rank uniform grid
+    counts = moe_placement.simulate_router_counts(16, 32, skew=1.2)
+    spm = np.ones(16)
+    spm[5] = 0.0
+    plan = moe_placement.plan_expert_placement(counts, 16, speeds=spm)
+    gm = prefix.prefix_sum_2d(counts)
+    assert float(np.asarray(plan.partition.loads(gm))[5]) == 0.0
+    assert not plan.fell_back
+    assert np.isinf(plan.uniform_imbalance)
+    assert np.isfinite(plan.load_imbalance)
+
+    # batcher: dead replica gets nothing, coverage preserved
+    reqs = [batcher.Request(i, 100 + 7 * (i % 13)) for i in range(50)]
+    spb = np.array([1, 0, 1, 0.3, 1, 1], dtype=np.float64)
+    for algo in ("optimal", "direct"):
+        asg = batcher.plan(reqs, 6, algo=algo, speeds=spb)
+        assert asg[1].load == 0
+        assert sum(len(a.requests) for a in asg) == len(reqs)
+    with pytest.raises(ValueError, match="capacity-aware"):
+        batcher.plan(reqs, 6, algo="rb", speeds=spb)
+    re = batcher.straggler_rebalance(asg, [1.0, 1.0, 0.2, 0.5, 1.0, 1.0],
+                                     speeds=spb)
+    assert re[1].load == 0
