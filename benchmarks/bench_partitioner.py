@@ -7,8 +7,19 @@ perf or exactness regression in the shared probe/bisection engine
 
 Reference points (seed, this container): jag-m-heur-probe m=1000 ~119ms,
 jag-pq-opt m=1000 (P=25,Q=40) ~547ms.  Engine-backed: ~26ms / ~160ms.
+
+The ``jag-pq-opt-device`` record times the device-native exact solver
+batched under ``vmap``: 8 lanes — the Uniform instance, its transpose
+(the two orientations of the host ``orient='best'`` dispatch), and 6
+perturbed variants — solved in one call.  Its ``bottleneck`` is
+``min(Lmax[A], Lmax[A.T])``, which must equal the host
+``jag-pq-opt.m1000`` record's orient-best bottleneck bit-for-bit, and
+the per-frame time is asserted >= 3x faster than the same-run host
+solve.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core import prefix, registry
 from .common import emit, timeit
@@ -37,4 +48,36 @@ def run(quick: bool = True) -> dict:
         out[(name, m)] = (dt, bott)
         emit(f"partitioner.{name}.m{m}", dt, f"Lmax={bott:.0f}",
              bottleneck=bott, m=m, n=n)
+
+    # device-native exact JAG-PQ, batched under vmap (see module docstring)
+    import jax
+    import jax.numpy as jnp
+    from repro.core import device
+
+    B, P, Q = 8, 25, 40
+    rng = np.random.default_rng(0)
+    frames = [A, A.T] + [A + rng.integers(0, 3, A.shape)
+                         for _ in range(B - 2)]
+    gs = jnp.asarray(np.stack([prefix.prefix_sum_2d(f) for f in frames]),
+                     jnp.int32)
+    fn = jax.jit(jax.vmap(
+        lambda gd: device.jag_pq_opt_device_impl(gd, P=P, Q=Q)))
+
+    def batched():
+        res = fn(gs)
+        res[3].block_until_ready()
+        return res
+
+    res = batched()  # compile
+    _, dt_batch = timeit(batched, repeats=3 if quick else 5)
+    per_frame = dt_batch / B
+    bott_dev = int(min(int(res[3][0]), int(res[3][1])))  # orient-best
+    host_dt, host_bott = out[("jag-pq-opt", 1000)]
+    assert bott_dev == int(host_bott), (bott_dev, host_bott)
+    speedup = host_dt / per_frame
+    emit(f"partitioner.jag-pq-opt-device.m{P * Q}.vmap{B}", per_frame,
+         f"Lmax={bott_dev};speedup={speedup:.2f}x_vs_host",
+         bottleneck=bott_dev, m=P * Q, n=n)
+    assert speedup >= 3.0, f"device vmap path only {speedup:.2f}x vs host"
+    out[("jag-pq-opt-device", P * Q)] = (per_frame, bott_dev)
     return out

@@ -69,9 +69,12 @@ def run(quick: bool = True) -> dict:
         for a, b in zip(sh, batched):  # sharded cuts must stay bit-identical
             assert np.array_equal(np.asarray(a), np.asarray(b))
         _, dt_shard = timeit(sharded, repeats=3)
+        # devices= stamps the mesh this record actually ran on — compare.py
+        # rejects a D<k> record regenerated on a smaller mesh, so a
+        # single-device rerun can no longer masquerade as the D8 baseline
         emit(f"rebalance.plan.sharded.D{D}.T{T}.n{n}.m{m}", dt_shard,
              f"fps={T / dt_shard:.0f};speedup={dt_batch / dt_shard:.2f}x"
-             f"_vs_1dev")
+             f"_vs_1dev", devices=D)
     else:
         print("# rebalance.plan.sharded skipped: 1 device (set XLA_FLAGS="
               "--xla_force_host_platform_device_count=8)", flush=True)

@@ -24,13 +24,44 @@ A baseline record absent from the candidate run also fails (a bench that
 silently stops emitting is a gate hole, not a retirement) unless its name
 matches an ``--allow-missing`` substring; candidate records without a
 baseline are listed as "new (ungated)" and pass.
+
+Mesh-size honesty: a record whose name declares a mesh (``.D8.``) must
+carry a ``devices`` field of at least that size — both in the candidate
+run and the baseline.  A ``D<k>`` record regenerated on a smaller mesh
+(e.g. a laptop rerun without the forced-device XLA flag) reports
+single-device timings under a multi-device name; the stamp makes that a
+hard failure instead of a silently lying baseline.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import statistics
 import sys
+
+_MESH_RE = re.compile(r"\.D(\d+)\.")
+
+
+def declared_mesh(name: str) -> int | None:
+    """Device count a record's name claims (``...D8...`` -> 8), if any."""
+    m = _MESH_RE.search(name)
+    return int(m.group(1)) if m else None
+
+
+def mesh_violation(rec: dict) -> str | None:
+    """Why ``rec`` lies about its mesh, or None if it is honest."""
+    k = declared_mesh(rec["name"])
+    if k is None or k <= 1:
+        return None
+    devices = rec.get("devices")
+    if devices is None:
+        return (f"declares a {k}-device mesh but carries no 'devices' "
+                f"stamp (regenerate with the current bench_rebalance)")
+    if int(devices) < k:
+        return (f"declares a {k}-device mesh but ran on {devices} "
+                f"device(s)")
+    return None
 
 
 def load(path: str) -> dict[str, dict]:
@@ -74,6 +105,12 @@ def main() -> None:
         else statistics.median(ratios.values())
 
     failures = []
+    for label, recs in (("baseline", base), ("candidate", new)):
+        for name in sorted(recs):
+            why = mesh_violation(recs[name])
+            if why is not None:
+                print(f"! {name}: MESH VIOLATION ({label}) — {why}")
+                failures.append(f"{label} record {name!r} {why}")
     for name in sorted(base):
         if name not in new:
             if any(tok in name for tok in args.allow_missing):

@@ -17,8 +17,8 @@ def main():
           f"Delta={A.max() / A.min():.2f}, m={m}\n")
     print(f"{'algorithm':20s} {'LI %':>8s} {'rects':>6s}")
     for name in ["rect-uniform", "rect-nicol", "jag-pq-heur", "jag-pq-opt",
-                 "jag-m-heur", "jag-m-heur-probe", "hier-rb",
-                 "hier-relaxed", "hybrid"]:
+                 "jag-pq-opt-device", "jag-m-heur", "jag-m-heur-probe",
+                 "hier-rb", "hier-relaxed", "hybrid"]:
         part = registry.partition(name, gamma, m)
         assert part.is_valid()
         print(f"{name:20s} {part.load_imbalance(gamma) * 100:8.2f} "

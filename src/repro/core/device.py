@@ -23,11 +23,32 @@ on a host CPU, hostile to a TPU's vector units. We restructure it:
   vectors ever leave the device — the load matrix stays in HBM, enabling
   the distributed rebalancing the paper's Section 6 calls for.
 
+Exact solvers (ported from the host engine, PR 7):
+
+- ``wide_bisect_exact_device`` / ``wide_bisect_float_device``: the
+  ``lax.while_loop`` twins of ``search.bisect_bottleneck``'s two branches.
+  Unlike the fixed-round ``wide_bisect_device`` scan, the integer loop runs
+  until the interval closes, so it terminates at the *true* minimal
+  feasible integer — the same value the host bisection finds, whatever
+  candidate schedule either side probes.
+- ``nicol_optimal_device`` / ``jag_pq_opt_device`` / ``jag_m_opt_device``:
+  the paper's exact 1D / P x Q jagged / m-way jagged solvers fully
+  on-device.  For integer inputs the bottlenecks are bit-identical to
+  ``oned.probe_bisect_optimal`` / ``jagged.jag_pq_opt`` /
+  ``jagged.jag_m_opt`` (equivalence-swept in the tests), and the 1D and
+  jagged-PQ *cuts* match the host greedy realization bit-for-bit: greedy
+  maximal extension at any L in [L*, next realizable value) yields the
+  same cut array, and both sides realize at an L in that window.
+  Integer inputs should be int32 with total load < 2**30 (targets are
+  ``p + L``; jax x64 is off by default).  All three batch under ``vmap``
+  — the batched ``while_loop`` runs rounds until every lane converges.
+
 All functions are pure jnp/lax: they jit, vmap, and lower under pjit.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -208,3 +229,642 @@ jag_m_heur_device = jax.jit(
 jag_m_heur_device.__doc__ = ("JAG-M-HEUR fully on device (jitted).\n"
                              + jag_m_heur_device_impl.__doc__
                              .split("\n", 1)[1])
+
+
+# ---------------------------------------------------------------------------
+# exact wide bisection (lax.while_loop — runs until the interval closes)
+
+
+def _interior_candidates(lo, hi, j, k: int):
+    """The k interior integer candidates ``lo + span*j // (k+1)``.
+
+    Same schedule as the host engine's integral branch, factored to avoid
+    the ``span * j`` overflow: ``span*j // (k+1)`` is computed as
+    ``(span // (k+1)) * j + ((span % (k+1)) * j) // (k+1)`` (exact
+    identity), so no intermediate ever exceeds ``span``.
+    """
+    span = hi - lo
+    return lo + (span // (k + 1)) * j + ((span % (k + 1)) * j) // (k + 1)
+
+
+def wide_bisect_exact_device(feasible, lo, hi, *, k: int = 15):
+    """Minimal feasible integer in [lo, hi] — exact device bisection.
+
+    ``feasible(cand)`` maps a (k,) integer candidate vector to a (k,)
+    bool mask (monotone: once True, always True); ``hi`` must be
+    feasible.  Each round probes the host schedule's interior candidates
+    and shrinks [lo, hi] to the bracketing verdicts; the ``while_loop``
+    runs until ``lo == hi``, so the result is the true optimum (the
+    fixed-round ``wide_bisect_device`` scan only brackets it).  Batches
+    under vmap: the batched loop iterates until every lane converges.
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    dtype = jnp.result_type(lo, hi)
+    j = jnp.arange(1, k + 1, dtype=dtype)
+
+    def cond(c):
+        clo, chi = c
+        return clo < chi
+
+    def body(c):
+        clo, chi = c
+        cand = _interior_candidates(clo, chi, j, k)
+        feas = feasible(cand)
+        hi_new = jnp.min(jnp.where(feas, cand, chi))
+        lo_new = jnp.max(jnp.where(feas, clo, cand + 1))
+        return jnp.maximum(clo, lo_new), jnp.minimum(chi, hi_new)
+
+    _, hi = jax.lax.while_loop(cond, body,
+                               (lo.astype(dtype), hi.astype(dtype)))
+    return hi
+
+
+def _wide_bisect_exact_batch(feasible, lo, hi, *, k: int = 15):
+    """Lockstep exact integer bisection over S independent intervals.
+
+    ``lo``/``hi`` are (S,) vectors; ``feasible(cand)`` maps an (S, k)
+    candidate matrix to an (S, k) bool mask.  One probe round serves all
+    rows (the device twin of ``search.bisect_bottleneck_batch``) — this
+    is what lets the per-stripe column solves share one probe kernel
+    call per round instead of vmapping S independent loops.
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    dtype = jnp.result_type(lo, hi)
+    j = jnp.arange(1, k + 1, dtype=dtype)
+
+    def cond(c):
+        clo, chi = c
+        return jnp.any(clo < chi)
+
+    def body(c):
+        clo, chi = c
+        cand = _interior_candidates(clo[:, None], chi[:, None], j[None, :], k)
+        feas = feasible(cand)
+        hi_new = jnp.min(jnp.where(feas, cand, chi[:, None]), axis=1)
+        lo_new = jnp.max(jnp.where(feas, clo[:, None], cand + 1), axis=1)
+        return jnp.maximum(clo, lo_new), jnp.minimum(chi, hi_new)
+
+    _, hi = jax.lax.while_loop(cond, body,
+                               (lo.astype(dtype), hi.astype(dtype)))
+    return hi
+
+
+def wide_bisect_float_device(feasible, lo, hi, *, k: int = 15,
+                             rel_tol: float = 1e-9, abs_tol: float = 1e-12,
+                             max_rounds: int = 128):
+    """Float twin: converge ``hi`` to within the host engine's tolerance.
+
+    Mirrors the float branch of ``search.bisect_bottleneck`` (candidates
+    ``lo + (hi-lo) * j/(k+1)``, tolerance ``max(rel|hi|, abs)``); the
+    relative tolerance is floored at 4 ulp of the working dtype so f32
+    inputs terminate, and ``max_rounds`` backstops degenerate intervals
+    where rounding stalls both endpoints.
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    dtype = jnp.result_type(lo, hi, jnp.float32)
+    rel = max(rel_tol, 4 * float(jnp.finfo(dtype).eps))
+    fr = jnp.arange(1, k + 1, dtype=dtype) / (k + 1)
+
+    def cond(c):
+        clo, chi, r = c
+        open_ = chi - clo > jnp.maximum(rel * jnp.abs(chi), abs_tol)
+        return open_ & (r < max_rounds)
+
+    def body(c):
+        clo, chi, r = c
+        cand = clo + (chi - clo) * fr
+        feas = feasible(cand)
+        hi_new = jnp.min(jnp.where(feas, cand, chi))
+        lo_new = jnp.max(jnp.where(feas, clo, cand))
+        return (jnp.maximum(clo, lo_new), jnp.minimum(chi, hi_new), r + 1)
+
+    _, hi, _ = jax.lax.while_loop(
+        cond, body, (lo.astype(dtype), hi.astype(dtype), jnp.int32(0)))
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# exact greedy realization (host ``oned.probe`` semantics, bit-for-bit)
+
+
+def _greedy_cuts_exact(p: jnp.ndarray, m: int, L: jnp.ndarray) -> jnp.ndarray:
+    """Greedy cuts at a *feasible* L, mirroring ``oned.probe`` exactly.
+
+    Intervals extend maximally; once the remainder fits in one interval
+    the chain collapses — cuts stay at the current position and the final
+    cut takes the tail — exactly the host probe's early-return pattern,
+    so the realized cut arrays (not just bottlenecks) are bit-identical
+    to ``search.realize`` output for integer loads.
+    """
+    n = p.shape[0] - 1
+
+    def step(pos, _):
+        rem_fits = p[n] - jnp.take(p, pos) <= L
+        out = jnp.where(rem_fits, pos, _advance(p, pos, L))
+        return out, out
+
+    _, cuts = jax.lax.scan(step, jnp.int32(0), None, length=m)
+    cuts = jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
+    return cuts.at[m].set(n)
+
+
+def _greedy_cuts_speeds(p: jnp.ndarray, L: jnp.ndarray,
+                        speeds: jnp.ndarray) -> jnp.ndarray:
+    """Capacity-aware greedy cuts: position k packs at most L * speeds[k].
+
+    Mirrors the hetero branch of ``oned.probe``: dead (speed 0) positions
+    keep the current cut (an empty interval), no remainder collapse.  At
+    an infeasible L the final cut simply falls short of n — callers check
+    ``cuts[-1] == n`` for feasibility.
+    """
+    n = p.shape[0] - 1
+
+    def step(pos, sp_k):
+        target = jnp.take(p, pos) + L * sp_k
+        nxt = jnp.searchsorted(p, target, side="right") - 1
+        nxt = jnp.clip(nxt, pos, n)
+        out = jnp.where(sp_k > 0, nxt, pos)
+        return out, out
+
+    _, cuts = jax.lax.scan(step, jnp.int32(0), speeds)
+    return jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
+
+
+def _cut_loads(p: jnp.ndarray, cuts: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p, cuts[1:]) - jnp.take(p, cuts[:-1])
+
+
+def _exact_1d_bounds_int(p: jnp.ndarray, m: int):
+    """Integer [lo, hi] bracketing the 1D optimum: lo any lower bound,
+    hi a feasible integer (floor of the DirectCut bound, +1 for the
+    integer-division slack)."""
+    n = p.shape[0] - 1
+    total = p[n]
+    maxel = jnp.max(jnp.diff(p))
+    lo = jnp.maximum((total + m - 1) // m, maxel)
+    hi = total // m + maxel + 1
+    return lo, jnp.maximum(hi, lo)
+
+
+# ---------------------------------------------------------------------------
+# exact 1D (NicolPlus-quality bottleneck, device-native)
+
+
+def nicol_optimal_device_impl(p: jnp.ndarray, m: int,
+                              speeds: jnp.ndarray | None = None, *,
+                              k: int = 15, use_pallas_probe: bool = False,
+                              interpret: bool = True):
+    """Unjitted body of :func:`nicol_optimal_device`.
+
+    Returns ``(cuts (m+1,) int32, bottleneck scalar)``.  Integer ``p``
+    takes the exact integer bisection (bottleneck and cuts bit-identical
+    to ``oned.probe_bisect_optimal`` / ``oned.nicol_optimal``); float
+    ``p`` converges to the host float tolerance.  ``speeds`` switches to
+    the relative-load objective (always float; pass the vector already
+    normalized by ``search.normalize_speeds`` — uniform vectors should
+    be dropped to ``None`` host-side to keep the homogeneous path
+    bit-identical).  ``use_pallas_probe`` routes the homogeneous
+    feasibility probe through the ``kernels.probe`` Pallas kernel
+    (``interpret=True`` for CPU) instead of the jnp scan.
+    """
+    n = p.shape[0] - 1
+    if speeds is not None:
+        sp = jnp.asarray(speeds)
+        ft = jnp.result_type(sp.dtype, jnp.float32)
+        pf = p.astype(ft)
+        total = pf[n] - pf[0]
+        maxel = jnp.max(jnp.diff(pf))
+        smax = jnp.max(sp)
+        lo = jnp.maximum(total / jnp.sum(sp), maxel / smax)
+        hi = (total / smax) * (1 + 1e-9) + 1e-12
+
+        def feasible(cand):
+            def one(L):
+                return _greedy_cuts_speeds(p, L, sp)[-1] == n
+            return jax.vmap(one)(cand)
+
+        L = wide_bisect_float_device(feasible, lo, hi, k=k)
+        cuts = _greedy_cuts_speeds(p, L, sp)
+        loads = _cut_loads(p, cuts).astype(ft)
+        rel = jnp.where(loads > 0, loads / sp, 0.0)
+        return cuts, jnp.max(rel)
+
+    integral = jnp.issubdtype(p.dtype, jnp.integer)
+    if integral:
+        lo, hi = _exact_1d_bounds_int(p, m)
+    else:
+        total = p[n]
+        maxel = jnp.max(jnp.diff(p))
+        lo = jnp.maximum(total / m, maxel)
+        hi = total / m + maxel
+
+    if use_pallas_probe:
+        from repro.kernels.probe import ops as probe_ops
+
+        def feasible(cand):
+            cnt = probe_ops.probe_counts_impl(
+                p[None, :], cand[None, :].astype(p.dtype), m,
+                use_pallas=True, interpret=interpret)
+            return cnt[0] <= m
+    else:
+        def feasible(cand):
+            return probe_device(p, m, cand)
+
+    if integral:
+        L = wide_bisect_exact_device(feasible, lo, hi, k=k)
+    else:
+        L = wide_bisect_float_device(feasible, lo, hi, k=k)
+    cuts = _greedy_cuts_exact(p, m, L)
+    return cuts, jnp.max(_cut_loads(p, cuts))
+
+
+nicol_optimal_device = jax.jit(
+    nicol_optimal_device_impl,
+    static_argnames=("m", "k", "use_pallas_probe", "interpret"))
+nicol_optimal_device.__doc__ = (
+    "Exact 1D partition fully on device (jitted).\n"
+    + nicol_optimal_device_impl.__doc__.split("\n", 1)[1])
+
+
+# ---------------------------------------------------------------------------
+# exact P x Q jagged (JAG-PQ-OPT, device-native)
+
+
+def _bs_steps(n1: int) -> int:
+    """Static binary-search step count resolving an index in [0, n1+1)."""
+    return max(1, math.ceil(math.log2(n1 + 2)))
+
+
+def _stripe_row(gamma: jnp.ndarray, b, e) -> jnp.ndarray:
+    """Column prefix array of stripe [b, e): (n2+1,) non-decreasing."""
+    return jnp.take(gamma, e, axis=0) - jnp.take(gamma, b, axis=0)
+
+
+def _stripe_fits(gamma: jnp.ndarray, b, e, L, Q: int,
+                 sp_slice: jnp.ndarray | None = None):
+    """Does stripe [b, e) pack into <= Q column intervals of load <= L?
+
+    Greedy maximal extension over the stripe's column prefix (exact for
+    the monotone objective).  With ``sp_slice`` ((Q,) speeds) position q
+    packs at most ``L * sp_slice[q]`` and dead positions are skipped —
+    the device twin of ``oned.probe_count(speeds=...) <= Q``.
+    """
+    q = _stripe_row(gamma, b, e)
+    n2 = q.shape[0] - 1
+    if sp_slice is None:
+        def step(pos, _):
+            target = jnp.take(q, pos) + L
+            nxt = jnp.searchsorted(q, target, side="right") - 1
+            return jnp.clip(nxt, pos, n2), None
+
+        pos, _ = jax.lax.scan(step, jnp.int32(0), None, length=Q)
+    else:
+        def step(pos, sp_k):
+            target = jnp.take(q, pos) + L * sp_k
+            nxt = jnp.searchsorted(q, target, side="right") - 1
+            nxt = jnp.clip(nxt, pos, n2)
+            return jnp.where(sp_k > 0, nxt, pos), None
+
+        pos, _ = jax.lax.scan(step, jnp.int32(0), sp_slice)
+    return pos == n2
+
+
+def _largest_stripe_end(gamma: jnp.ndarray, b, L, Q: int,
+                        sp_slice: jnp.ndarray | None = None):
+    """Largest e in [b, n1] whose stripe [b, e) fits (binary search).
+
+    Fitting is monotone non-increasing in e (pointwise load domination),
+    the same assumption the host ``_RowProbe`` bisects under.  The empty
+    stripe always fits, so the invariant end is ``b``; the step count is
+    static (worst case over the whole row range).
+    """
+    n1 = gamma.shape[0] - 1
+
+    def bs(carry, _):
+        glo, ghi = carry
+        mid = (glo + ghi) // 2
+        ok = _stripe_fits(gamma, b, mid, L, Q, sp_slice)
+        return (jnp.where(ok, mid, glo), jnp.where(ok, ghi, mid)), None
+
+    init = (jnp.asarray(b, jnp.int32), jnp.full_like(jnp.asarray(b,
+                                                     jnp.int32), n1 + 1))
+    (glo, _), _ = jax.lax.scan(bs, init, None, length=_bs_steps(n1))
+    return glo
+
+
+def _row_scan(gamma: jnp.ndarray, L, P: int, Q: int,
+              sp2: jnp.ndarray | None = None, *, realize: bool = False):
+    """P greedy stripe steps at bottleneck L.
+
+    ``realize=False``: feasibility — final position == n1.
+    ``realize=True``: the host ``_RowProbe.cuts`` realization — once the
+    remainder fits the chain collapses (cuts stay at b, final cut n1),
+    bit-identical to the host row cuts at the same L.  ``sp2`` is the
+    (P, Q) per-stripe speed schedule for the capacity-aware form (which,
+    like the host hetero realizer, has no collapse shortcut).
+    """
+    n1 = gamma.shape[0] - 1
+
+    if sp2 is None:
+        def step(b, _):
+            e = _largest_stripe_end(gamma, b, L, Q)
+            if realize:
+                rem = _stripe_fits(gamma, b, n1, L, Q)
+                e = jnp.where(rem, b, e)
+            out = jnp.maximum(e, b)
+            return out, out
+
+        b, cuts = jax.lax.scan(step, jnp.int32(0), None, length=P)
+    else:
+        def step(b, sp_s):
+            e = _largest_stripe_end(gamma, b, L, Q, sp_s)
+            out = jnp.maximum(e, b)
+            return out, out
+
+        b, cuts = jax.lax.scan(step, jnp.int32(0), sp2)
+    if not realize:
+        return b == n1
+    cuts = jnp.concatenate([jnp.zeros(1, jnp.int32), cuts])
+    if sp2 is None:
+        cuts = cuts.at[P].set(n1)
+    return cuts
+
+
+def _collapse_cuts(n2: int, m: int) -> jnp.ndarray:
+    """The host probe's zero-load pattern: [0, ..., 0, n2]."""
+    return jnp.zeros(m + 1, jnp.int32).at[m].set(n2)
+
+
+def jag_pq_opt_device_impl(gamma: jnp.ndarray, *, P: int, Q: int,
+                           speeds: jnp.ndarray | None = None, k: int = 15,
+                           use_pallas_probe: bool = False,
+                           interpret: bool = True):
+    """Unjitted body of :func:`jag_pq_opt_device` (JAG-PQ-OPT on device).
+
+    gamma: (n1+1, n2+1) device prefix sums, 'hor' orientation (transpose
+    the Gamma for 'ver'; the registry wrapper runs both and keeps the
+    better, like the host ``orient='best'``).
+
+    Returns ``(row_cuts (P+1,), counts (P,) == Q, col_cuts (P, Q+1),
+    Lmax)``.  Integer gammas take the exact integer bisection: bottleneck
+    *and* cuts are bit-identical to ``jagged.jag_pq_opt(orient='hor')``
+    — the row probe is the same greedy maximal stripe extension, and the
+    per-stripe column solves converge to each stripe's own minimal
+    feasible integer before realizing with the host probe's collapse
+    semantics.  ``speeds`` ((P*Q,) pre-normalized) switches everything to
+    relative load (always float; bottleneck matches the host hetero
+    solver to its 1e-9 tolerance).  ``use_pallas_probe`` routes the
+    per-stripe column feasibility probes through the ``kernels.probe``
+    Pallas kernel — with a Pallas SAT stage in front this is the fused
+    SAT -> probe -> cut path, no host round-trip anywhere.
+    """
+    n1 = gamma.shape[0] - 1
+    n2 = gamma.shape[1] - 1
+    m = P * Q
+    total = gamma[n1, n2]
+    integral = jnp.issubdtype(gamma.dtype, jnp.integer) and speeds is None
+    maxrow = jnp.max(jnp.diff(gamma[:, n2]))
+    # the per-stripe column greedy's "element" is a column sum *within the
+    # stripe*, bounded by the full-column load — not by the max cell
+    maxcol = jnp.max(jnp.diff(gamma[n1, :]))
+
+    if speeds is not None:
+        sp = jnp.asarray(speeds)
+        sp2 = sp.reshape(P, Q)
+        ft = jnp.result_type(sp.dtype, jnp.float32)
+        smin_pos = jnp.min(jnp.where(sp > 0, sp, jnp.inf))
+        lo = total.astype(ft) / jnp.sum(sp)
+        hi = (total.astype(ft) / smin_pos) * (1 + 1e-9) + 1e-12
+        hi = jnp.maximum(hi, lo)
+
+        def feasible(cand):
+            return jax.vmap(
+                lambda L: _row_scan(gamma, L, P, Q, sp2))(cand)
+
+        L = wide_bisect_float_device(feasible, lo, hi, k=k)
+        row_cuts = _row_scan(gamma, L, P, Q, sp2, realize=True)
+        sm = (jnp.take(gamma, row_cuts[1:], axis=0)
+              - jnp.take(gamma, row_cuts[:-1], axis=0))  # (P, n2+1)
+
+        def stripe_solve(p_s, sp_s):
+            cuts, bott = nicol_optimal_device_impl(p_s, Q, sp_s, k=k)
+            zero = p_s[n2] - p_s[0] <= 0
+            cuts = jnp.where(zero, _collapse_cuts(n2, Q), cuts)
+            return cuts, jnp.where(zero, jnp.asarray(0, bott.dtype), bott)
+
+        col_cuts, bots = jax.vmap(stripe_solve)(sm, sp2)
+        counts = jnp.full((P,), Q, jnp.int32)
+        return row_cuts, counts, col_cuts, jnp.max(bots)
+
+    if integral:
+        lo = (total + m - 1) // m
+        hi = total // m + maxrow // Q + maxcol + 2
+        hi = jnp.maximum(hi, lo)
+    else:
+        lo = total / m
+        hi = (total / m + maxrow / Q + maxcol) * (1 + 1e-9) + 1e-12
+        hi = jnp.maximum(hi, lo)
+
+    def feasible(cand):
+        return jax.vmap(lambda L: _row_scan(gamma, L, P, Q))(cand)
+
+    if integral:
+        L = wide_bisect_exact_device(feasible, lo, hi, k=k)
+    else:
+        L = wide_bisect_float_device(feasible, lo, hi, k=k)
+    row_cuts = _row_scan(gamma, L, P, Q, realize=True)
+    sm = (jnp.take(gamma, row_cuts[1:], axis=0)
+          - jnp.take(gamma, row_cuts[:-1], axis=0))  # (P, n2+1)
+
+    # per-stripe exact column solves, lockstep across stripes: one probe
+    # round (optionally one Pallas kernel call) serves every open stripe.
+    los, his = jax.vmap(lambda p_s: _exact_1d_bounds_int(p_s, Q)
+                        if integral else (jnp.maximum(p_s[n2] / Q,
+                                                      jnp.max(jnp.diff(p_s))),
+                                          p_s[n2] / Q
+                                          + jnp.max(jnp.diff(p_s))))(sm)
+
+    if use_pallas_probe:
+        from repro.kernels.probe import ops as probe_ops
+
+        def sfeasible(cand):
+            cnt = probe_ops.probe_counts_impl(
+                sm, cand.astype(sm.dtype), Q,
+                use_pallas=True, interpret=interpret)
+            return cnt <= Q
+    else:
+        def sfeasible(cand):
+            return jax.vmap(lambda p_s, c_s: probe_device(p_s, Q, c_s))(
+                sm, cand)
+
+    if integral:
+        Ls = _wide_bisect_exact_batch(sfeasible, los, his, k=k)
+    else:
+        # float columns: vmapped scalar float bisections (rarely hot)
+        Ls = jax.vmap(lambda p_s, l_s, h_s: wide_bisect_float_device(
+            lambda c: probe_device(p_s, Q, c), l_s, h_s, k=k))(sm, los, his)
+    col_cuts = jax.vmap(lambda p_s, L_s: _greedy_cuts_exact(p_s, Q, L_s))(
+        sm, Ls)
+    bots = jax.vmap(_cut_loads)(sm, col_cuts)
+    counts = jnp.full((P,), Q, jnp.int32)
+    return row_cuts, counts, col_cuts, jnp.max(bots)
+
+
+jag_pq_opt_device = jax.jit(
+    jag_pq_opt_device_impl,
+    static_argnames=("P", "Q", "k", "use_pallas_probe", "interpret"))
+jag_pq_opt_device.__doc__ = ("JAG-PQ-OPT fully on device (jitted).\n"
+                             + jag_pq_opt_device_impl.__doc__
+                             .split("\n", 1)[1])
+
+
+# ---------------------------------------------------------------------------
+# exact m-way jagged (JAG-M-OPT, device-native; small instances)
+
+
+def _stripe_count_leq(gamma: jnp.ndarray, b, e, L, x, m: int):
+    """Does stripe [b, e) pack into <= x column intervals at L?  The
+    greedy runs a static m steps with steps past x masked off."""
+    q = _stripe_row(gamma, b, e)
+    n2 = q.shape[0] - 1
+
+    def step(pos, i):
+        target = jnp.take(q, pos) + L
+        nxt = jnp.searchsorted(q, target, side="right") - 1
+        nxt = jnp.clip(nxt, pos, n2)
+        return jnp.where(i < x, nxt, pos), None
+
+    pos, _ = jax.lax.scan(step, jnp.int32(0),
+                          jnp.arange(m, dtype=jnp.int32))
+    return pos == n2
+
+
+def _jump(gamma: jnp.ndarray, b, L, x, m: int):
+    """Largest e with stripe [b, e) packing into <= x intervals at L."""
+    n1 = gamma.shape[0] - 1
+
+    def bs(carry, _):
+        glo, ghi = carry
+        mid = (glo + ghi) // 2
+        ok = _stripe_count_leq(gamma, b, mid, L, x, m)
+        return (jnp.where(ok, mid, glo), jnp.where(ok, ghi, mid)), None
+
+    (glo, _), _ = jax.lax.scan(bs, (jnp.asarray(b, jnp.int32),
+                                    jnp.int32(n1 + 1)), None,
+                               length=_bs_steps(n1))
+    return glo
+
+
+def _jag_m_reach(gamma: jnp.ndarray, L, m: int):
+    """Reach DP: r[q] = furthest row coverable by q processors at L.
+
+    ``r[q] = max over x in [1, q] of jump_x(r[q - x])`` — jump is
+    monotone in its start, so the DP is exact.  Also records the argmax
+    ``x`` per q for the realization backtrack.  Feasible iff r[m] == n1.
+    """
+    r0 = jnp.zeros(m + 1, jnp.int32)
+    xs0 = jnp.zeros(m + 1, jnp.int32)
+
+    def per_q(carry, q):
+        r, xs = carry
+
+        def per_x(inner, x):
+            best_e, best_x = inner
+            e = _jump(gamma, jnp.take(r, q - x), L, x, m)
+            ok = (x <= q) & (e > best_e)
+            return (jnp.where(ok, e, best_e), jnp.where(ok, x, best_x)), None
+
+        (best_e, best_x), _ = jax.lax.scan(
+            per_x, (jnp.int32(0), jnp.int32(1)),
+            jnp.arange(1, m + 1, dtype=jnp.int32))
+        r = r.at[q].set(best_e)
+        xs = xs.at[q].set(best_x)
+        return (r, xs), None
+
+    (r, xs), _ = jax.lax.scan(per_q, (r0, xs0),
+                              jnp.arange(1, m + 1, dtype=jnp.int32))
+    return r, xs
+
+
+def jag_m_opt_device_impl(gamma: jnp.ndarray, *, m: int, k: int = 7):
+    """Unjitted body of :func:`jag_m_opt_device` (JAG-M-OPT on device).
+
+    Exact m-way jagged: bisect the bottleneck with the reach DP as the
+    feasibility probe, then backtrack the recorded stripe choices and
+    realize per-stripe column cuts greedily at L*.  Integer gammas give
+    bottlenecks bit-identical to ``jagged.jag_m_opt(orient='hor')`` (the
+    minimal feasible integer is solver-independent); realized stripe
+    structure may differ among equally-optimal decompositions.  Like the
+    host DP this is for small instances — the DP is O(m^2 log n1) probe
+    steps per candidate.
+
+    Returns ``(row_cuts (m+1,), counts (m,), col_cuts (m, m+1),
+    n_stripes, Lmax)`` — stripe arrays padded to m with empty stripes.
+    """
+    n1 = gamma.shape[0] - 1
+    n2 = gamma.shape[1] - 1
+    total = gamma[n1, n2]
+    cells = (gamma[1:, 1:] - gamma[:-1, 1:] - gamma[1:, :-1]
+             + gamma[:-1, :-1])
+    maxel = jnp.max(cells)
+    colmax = jnp.max(jnp.diff(gamma[n1, :]))
+    integral = jnp.issubdtype(gamma.dtype, jnp.integer)
+
+    def feasible_one(L):
+        r, _ = _jag_m_reach(gamma, L, m)
+        return r[m] == n1
+
+    if integral:
+        lo = jnp.maximum((total + m - 1) // m, maxel)
+        hi = jnp.maximum(total // m + colmax + 1, lo)
+        L = wide_bisect_exact_device(jax.vmap(feasible_one), lo, hi, k=k)
+    else:
+        lo = jnp.maximum(total / m, maxel)
+        hi = jnp.maximum((total / m + colmax) * (1 + 1e-9) + 1e-12, lo)
+        L = wide_bisect_float_device(jax.vmap(feasible_one), lo, hi, k=k)
+
+    r, xs = _jag_m_reach(gamma, L, m)
+
+    # backtrack: from q = m walk the recorded x choices; emits stripes
+    # last-first, padded with x = 0 once q hits 0.
+    def bt(q, _):
+        x = jnp.where(q > 0, jnp.take(xs, q), 0)
+        e = jnp.take(r, q)
+        b = jnp.take(r, q - x)
+        return q - x, (b, jnp.where(x > 0, e, b), x)
+
+    _, (bs_rev, es_rev, xr_rev) = jax.lax.scan(bt, jnp.int32(m), None,
+                                               length=m)
+    bs_f, es_f, xr_f = bs_rev[::-1], es_rev[::-1], xr_rev[::-1]
+    live = xr_f > 0
+    n_stripes = jnp.sum(live.astype(jnp.int32))
+    # compact live stripes to the front (stable order preserved)
+    pos = jnp.where(live, jnp.cumsum(live.astype(jnp.int32)) - 1, m)
+    # pad slots default to the empty stripe [n1, n1) so they carry no load
+    starts = jnp.full(m + 1, n1, jnp.int32).at[pos].set(bs_f, mode="drop")
+    ends = jnp.full(m + 1, n1, jnp.int32).at[pos].set(es_f, mode="drop")
+    counts = jnp.zeros(m + 1, jnp.int32).at[pos].set(xr_f, mode="drop")
+    starts, ends, counts = starts[:m], ends[:m], counts[:m]
+    row_cuts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                jnp.where(jnp.arange(m) < n_stripes,
+                                          ends, n1).astype(jnp.int32)])
+
+    def stripe_cuts(b, e, x):
+        p_s = _stripe_row(gamma, b, e)
+        cuts = _probe_cuts_masked(p_s, m, x, L)
+        cuts = jnp.where(x > 0, cuts, _collapse_cuts(n2, m))
+        bott = jnp.max(_cut_loads(p_s, cuts))
+        return cuts, jnp.where(x > 0, bott, jnp.zeros_like(bott))
+
+    col_cuts, bots = jax.vmap(stripe_cuts)(starts, ends, counts)
+    return row_cuts, counts, col_cuts, n_stripes, jnp.max(bots)
+
+
+jag_m_opt_device = jax.jit(jag_m_opt_device_impl,
+                           static_argnames=("m", "k"))
+jag_m_opt_device.__doc__ = ("JAG-M-OPT fully on device (jitted).\n"
+                            + jag_m_opt_device_impl.__doc__
+                            .split("\n", 1)[1])

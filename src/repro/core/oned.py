@@ -422,6 +422,13 @@ def optimal_1d(p: np.ndarray, m: int, *, warm: float | None = None,
     ``speeds`` minimizes the relative bottleneck ``load_i / speeds[i]``
     over the fixed processor order; dead (``speed=0``) positions receive
     empty intervals.
+
+    ``warm`` is a *probe-count* optimization only: a known-feasible upper
+    bound (e.g. the previous frame's bottleneck) tightens the bisection's
+    starting interval so fewer candidates are probed.  It never changes
+    the returned cuts — the bisection converges to the same minimal
+    feasible bottleneck from any valid bracket (regression-tested in
+    ``tests/test_search_equivalence.py``).
     """
     return probe_bisect_optimal(p, m, warm=warm, speeds=speeds)
 

@@ -20,10 +20,11 @@ _REGISTRY: dict[str, Callable[..., Partition]] = {}
 # Uniform/None speeds are legal everywhere — they normalize away before
 # dispatch, so every algorithm stays bit-identical to its homogeneous self.
 CAPACITY_AWARE = frozenset(
-    {"jag-pq-heur", "jag-pq-opt", "jag-m-heur", "jag-m-heur-probe"}
+    {"jag-pq-heur", "jag-pq-opt", "jag-pq-opt-device", "jag-m-heur",
+     "jag-m-heur-probe"}
     | {f"{_n}-{_o}"
-       for _n in ("jag-pq-heur", "jag-pq-opt", "jag-m-heur",
-                  "jag-m-heur-probe")
+       for _n in ("jag-pq-heur", "jag-pq-opt", "jag-pq-opt-device",
+                  "jag-m-heur", "jag-m-heur-probe")
        for _o in ("hor", "ver")}
     | {"hybrid", "hybrid_auto", "hybrid-auto", "hybrid_fastslow",
        "hybrid-fastslow"})
@@ -109,3 +110,64 @@ def _hybrid_fastslow(gamma, m, P: int | None = None, **kw):
 # dash-style aliases matching the rest of the registry's naming
 _REGISTRY["hybrid-auto"] = _REGISTRY["hybrid_auto"]
 _REGISTRY["hybrid-fastslow"] = _REGISTRY["hybrid_fastslow"]
+
+
+# ---------------------------------------------------------------------------
+# device-native exact variants.  jax imports stay lazy so the registry is
+# importable (and every host algorithm usable) in numpy-only contexts.
+
+
+def _as_device_gamma(gamma):
+    import jax.numpy as jnp
+    g = np.asarray(gamma)
+    if np.issubdtype(g.dtype, np.integer):
+        if int(g[-1, -1]) >= 2 ** 31:
+            raise ValueError(
+                f"total load {int(g[-1, -1])} overflows the device "
+                f"solvers' int32 accumulators; use the host solver or "
+                f"enable x64 and pass a float gamma")
+        return jnp.asarray(g, jnp.int32)
+    return jnp.asarray(g)
+
+
+@jagged._with_orientation
+def _jag_pq_opt_device(gamma, m, P: int | None = None,
+                       Q: int | None = None, speeds=None) -> Partition:
+    """Registry adapter: exact P x Q jagged, bisection fully on device.
+
+    Same contract (and bit-identical cuts) as ``jag-pq-opt``; the device
+    round-trips only the O(P * Q) cut vectors.
+    """
+    import jax.numpy as jnp
+    from . import device
+    if P is None or Q is None:
+        P, Q = jagged._default_pq(m)
+    sp = None if speeds is None else jnp.asarray(speeds)
+    rc, _, cc, _ = device.jag_pq_opt_device(_as_device_gamma(gamma),
+                                            P=P, Q=Q, speeds=sp)
+    cc = np.asarray(cc)
+    return jagged._build(gamma, np.asarray(rc), [cc[s] for s in range(P)])
+
+
+@jagged._with_orientation
+def _jag_m_opt_device(gamma, m) -> Partition:
+    """Registry adapter: exact m-way jagged DP, bisection on device.
+
+    Bottleneck bit-identical to ``jag-m-opt``; the realized stripe
+    structure may differ among equally-optimal decompositions.
+    """
+    from . import device
+    rc, cnt, cc, ns, _ = device.jag_m_opt_device(_as_device_gamma(gamma),
+                                                 m=m)
+    ns = int(ns)
+    cnt = np.asarray(cnt)
+    cc = np.asarray(cc)
+    return jagged._build(gamma, np.asarray(rc)[:ns + 1],
+                         [cc[s][:cnt[s] + 1] for s in range(ns)])
+
+
+for _name, _fn in [("jag-pq-opt-device", _jag_pq_opt_device),
+                   ("jag-m-opt-device", _jag_m_opt_device)]:
+    _REGISTRY[_name] = _fn
+    for _o in ("hor", "ver"):
+        _REGISTRY[f"{_name}-{_o}"] = functools.partial(_fn, orient=_o)

@@ -31,7 +31,8 @@ import numpy as np
 __all__ = [
     "PackedPrefixes", "bisect_bottleneck", "bisect_bottleneck_batch",
     "bisect_bottleneck_multi", "bisect_bottleneck_scalar", "bisect_index",
-    "chain_fits", "normalize_speeds", "realize", "split_candidates",
+    "chain_fits", "interior_candidates", "normalize_speeds", "realize",
+    "split_candidates",
 ]
 
 
@@ -259,6 +260,23 @@ def chain_fits(rows: np.ndarray, Ls: np.ndarray, cap: int) -> np.ndarray:
 # Wide bisection drivers
 
 
+def interior_candidates(lo_i: int, hi_i: int, width: int) -> np.ndarray:
+    """The integral round's candidate schedule: up to ``width`` interior
+    integers ``lo + span * j // (k+1)``, j = 1..k, deduplicated.
+
+    This is the one schedule every integral wide bisection probes — the
+    host loops here and the device's ``wide_bisect_exact_device`` mirror
+    it (with the ``span * j`` product split to stay in int32).  The
+    minimal feasible integer both converge to is schedule-independent,
+    but sharing it keeps round counts (and probe-budget accounting)
+    comparable across backends.
+    """
+    span = hi_i - lo_i
+    k = min(width, span)
+    j = np.arange(1, k + 1, dtype=np.int64)
+    return np.unique(lo_i + (span * j) // (k + 1))
+
+
 def bisect_bottleneck(feasible, lo, hi, *, integral: bool, width: int = 15,
                       rel_tol: float = 1e-9, abs_tol: float = 1e-12):
     """Smallest feasible bottleneck in [lo, hi] by wide bisection.
@@ -275,10 +293,7 @@ def bisect_bottleneck(feasible, lo, hi, *, integral: bool, width: int = 15,
         hi_i = int(np.floor(hi))
         lowered = False
         while lo_i < hi_i:
-            span = hi_i - lo_i
-            k = min(width, span)
-            j = np.arange(1, k + 1, dtype=np.int64)
-            cand = np.unique(lo_i + (span * j) // (k + 1))
+            cand = interior_candidates(lo_i, hi_i, width)
             feas = np.asarray(feasible(cand))
             f = np.flatnonzero(feas)
             nf = np.flatnonzero(~feas)

@@ -76,22 +76,33 @@ def jag_m_heur_3d(A: np.ndarray, m: int, P: int | None = None
             li = part.load_imbalance(A, m)
             if best is None or li < best[0]:
                 best = (li, part)
-        assert best is not None
+        if best is None:
+            # every candidate exceeded min(m, n1) — e.g. n1=1 where no
+            # multi-slab split exists; a single slab is the only choice
+            return jag_m_heur_3d(A, m, P=1)
         return best[1]
     P = min(P, m, n1)
     slab_loads = A.sum(axis=(1, 2)).astype(np.int64)
     p = np.concatenate([[0], np.cumsum(slab_loads)])
     slab_cuts = oned.optimal_1d(p, P)
     loads = (p[slab_cuts[1:]] - p[slab_cuts[:-1]]).astype(np.float64)
-    counts = _proportional_counts(loads, m)
+    counts = np.asarray(_proportional_counts(loads, m), dtype=np.int64)
+    # the 1D slab solve can emit empty slabs (its greedy collapses zero
+    # ranges); their processor budget must not vanish with them — hand
+    # each orphaned processor to the live slab with the highest load per
+    # assigned processor, so the partition still has exactly m boxes
+    live = [s for s in range(P)
+            if int(slab_cuts[s + 1]) > int(slab_cuts[s])]
+    orphaned = int(counts.sum()) - int(counts[live].sum())
+    for _ in range(orphaned):
+        s = max(live, key=lambda t: loads[t] / counts[t])
+        counts[s] += 1
     boxes: list[Box] = []
-    for s in range(P):
+    for s in live:
         x0, x1 = int(slab_cuts[s]), int(slab_cuts[s + 1])
-        if x1 <= x0:
-            continue
         A2 = A[x0:x1].sum(axis=0)
         g2 = prefix_sum_2d(A2)
-        part2 = jag_m_heur_probe(g2, counts[s], orient="hor")
+        part2 = jag_m_heur_probe(g2, int(counts[s]), orient="hor")
         for r in part2.rects:
             boxes.append(Box(x0, x1, r.r0, r.r1, r.c0, r.c1))
     return Partition3D(boxes, A.shape)

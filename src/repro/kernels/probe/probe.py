@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: batched greedy feasibility probe.
+
+One launch evaluates a whole (stripe, candidate) grid: for stripe s and
+candidate bottleneck Ls[s, k], how many greedy maximal intervals of load
+<= L cover the stripe's prefix row?  This is the inner loop of every
+exact bisection; fusing it keeps the SAT -> probe -> cut chain of
+``jag_pq_opt_device`` device-resident end to end.
+
+TPU-native design:
+
+- grid ``(S,)`` — one program per stripe; each program holds its (1, Npad)
+  prefix row and (1, Kpad) candidate block in VMEM and sweeps all
+  candidates in lockstep on the VPU.
+- ``searchsorted`` has no vector primitive, so it is recomputed as a
+  masked comparison count: the furthest index with ``p <= p[pos] + L`` is
+  ``sum((p <= target) & (iota <= n)) - 1`` over the (Kpad, Npad) broadcast
+  — a reduction the VPU does in registers.  The position gather is the
+  matching one-hot sum.  Both are O(N) per step instead of O(log N), but
+  the K candidates amortize one row load across the whole sweep and the
+  loop is compute-dense, branch-free vector code.
+- the step loop is a ``fori_loop`` of exactly ``cap`` rounds: a row that
+  never reaches the end (stuck on one oversize element, or needing more
+  than ``cap`` intervals) naturally reports the ``cap + 1`` sentinel —
+  bit-identical to ``kernels.probe.ref.probe_counts_ref`` /
+  ``oned.probe_count``.
+
+Blocks are padded to the (8, 128) f32 VREG tiling; padding columns are
+excluded by the ``iota <= n`` mask, padding candidates are harmless
+extra lanes whose counts are sliced away.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(p_ref, l_ref, o_ref, *, n: int, cap: int):
+    p_row = p_ref[0, :]                      # (Npad,)
+    Ls = l_ref[0, :]                         # (Kpad,)
+    npad = p_row.shape[0]
+    kpad = Ls.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (kpad, npad), 1)
+    valid = iota <= n
+    p2 = jnp.broadcast_to(p_row[None, :], (kpad, npad))
+
+    def step(_, carry):
+        pos, cnt = carry                     # (Kpad,) each
+        pv = jnp.sum(jnp.where(iota == pos[:, None], p2, 0), axis=1)
+        target = pv + Ls
+        ss = jnp.sum(((p2 <= target[:, None]) & valid).astype(jnp.int32),
+                     axis=1) - 1
+        nxt = jnp.clip(ss, pos, n)
+        adv = (pos < n) & (nxt > pos)
+        return jnp.where(adv, nxt, pos), cnt + adv.astype(jnp.int32)
+
+    pos0 = jnp.zeros((kpad,), jnp.int32)
+    pos, cnt = jax.lax.fori_loop(0, cap, step, (pos0, pos0))
+    o_ref[0, :] = jnp.where(pos < n, cap + 1, jnp.maximum(cnt, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def probe_counts_pallas(p: jnp.ndarray, Ls: jnp.ndarray, cap: int, *,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Greedy interval counts on device. p: (S, N+1), Ls: (S, K) -> (S, K)."""
+    S, n_plus_1 = p.shape
+    n = n_plus_1 - 1
+    K = Ls.shape[1]
+    npad = (-n_plus_1) % 128
+    kpad = (-K) % 128
+    # column padding sits behind the iota mask; candidate padding is junk
+    # lanes sliced off below (0 is a valid L: it just reports the sentinel)
+    pp = jnp.pad(p, ((0, 0), (0, npad)))
+    lp = jnp.pad(Ls, ((0, 0), (0, kpad)))
+
+    out = pl.pallas_call(
+        functools.partial(_probe_kernel, n=n, cap=cap),
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, n_plus_1 + npad), lambda s: (s, 0)),
+                  pl.BlockSpec((1, K + kpad), lambda s: (s, 0))],
+        out_specs=pl.BlockSpec((1, K + kpad), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, K + kpad), jnp.int32),
+        interpret=interpret,
+    )(pp, lp)
+    return out[:, :K]

@@ -1,0 +1,40 @@
+"""jnp oracle for the probe-counts kernel (and its semantics contract).
+
+``probe_counts_ref(p, Ls, cap)`` mirrors the homogeneous branch of
+``repro.core.oned.probe_count`` exactly:
+
+- each greedy step extends to the furthest index with load <= L;
+- a row that cannot advance (single element > L) or needs more than
+  ``cap`` intervals reports ``cap + 1`` (the infeasibility sentinel);
+- an empty row (total load 0 over zero elements) still counts 1.
+
+Feasibility for an m-way solve is therefore ``counts <= m`` with
+``cap = m`` — the same predicate the host ``PackedPrefixes.counts``
+path feeds ``search.bisect_bottleneck``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_counts_ref(p: jnp.ndarray, Ls: jnp.ndarray,
+                     cap: int) -> jnp.ndarray:
+    """Greedy interval counts. p: (S, N+1) prefixes, Ls: (S, K) -> (S, K)."""
+    n = p.shape[-1] - 1
+
+    def one_row(p_s, L_s):
+        def step(carry, _):
+            pos, cnt = carry
+            target = jnp.take(p_s, pos) + L_s
+            nxt = jnp.searchsorted(p_s, target, side="right") - 1
+            nxt = jnp.clip(nxt, pos, n)
+            adv = (pos < n) & (nxt > pos)
+            return (jnp.where(adv, nxt, pos), cnt + adv.astype(jnp.int32)), None
+
+        (pos, cnt), _ = jax.lax.scan(
+            step, (jnp.zeros_like(L_s, jnp.int32),
+                   jnp.zeros_like(L_s, jnp.int32)), None, length=cap)
+        return jnp.where(pos < n, cap + 1, jnp.maximum(cnt, 1))
+
+    return jax.vmap(one_row)(p, Ls)

@@ -73,10 +73,11 @@ def jag_m_heur_batch(gammas: jnp.ndarray, *, P: int, m: int, k: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("P", "m", "k", "rounds",
                                              "gamma_dtype", "use_pallas",
-                                             "interpret"))
+                                             "interpret", "exact"))
 def plan_stream(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
-                rounds: int = 8, gamma_dtype=jnp.float32,
-                use_pallas: bool = False, interpret: bool = True):
+                rounds: int = 8, gamma_dtype=None,
+                use_pallas: bool = False, interpret: bool = True,
+                exact: bool = False):
     """SAT + partitioner for a whole (T, n1, n2) stream under one jit.
 
     Composes the planner's *unjitted* stage bodies directly, so the fused
@@ -84,11 +85,14 @@ def plan_stream(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
     entry) per (shape, P, m, ...) signature, with every intermediate
     (frames, Gammas) kept on device; the returned pytree is the O(T * m)
     cut vectors only.  The mesh-sharded twin is
-    ``repro.rebalance.planner.plan_stream(mesh=...)``.
+    ``repro.rebalance.planner.plan_stream(mesh=...)``.  ``exact=True``
+    swaps in the exact device JAG-PQ-OPT (needs ``m % P == 0``; cuts
+    bit-identical to ``jagged.jag_pq_opt(orient='hor')`` per frame).
     """
     return planner.plan_frames(frames, P=P, m=m, k=k, rounds=rounds,
                                gamma_dtype=gamma_dtype,
-                               use_pallas=use_pallas, interpret=interpret)
+                               use_pallas=use_pallas, interpret=interpret,
+                               exact=exact)
 
 
 # ---------------------------------------------------------------------------

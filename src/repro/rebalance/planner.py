@@ -82,6 +82,18 @@ def _check_finite(frames, t0: int, t1: int, *, what: str) -> None:
 # stages (pure jnp, unjitted — composed under exactly one jit boundary)
 
 
+def resolve_gamma_dtype(gamma_dtype, *, exact: bool):
+    """Accumulator dtype: explicit wins; else int32 (exact) / f32 (heur).
+
+    The exact path bisects on *integers* — int32 accumulation is lossless
+    up to 2**31 total load, where f32 already lies above 2**24 — while the
+    heuristic path keeps its historical f32 default.
+    """
+    if gamma_dtype is not None:
+        return gamma_dtype
+    return jnp.int32 if exact else jnp.float32
+
+
 def ingest_stage(frames: jnp.ndarray, *,
                  gamma_dtype=jnp.float32) -> jnp.ndarray:
     """Frame ingest: cast to the accumulator dtype *before* the SAT scan.
@@ -108,31 +120,52 @@ def sat_stage(frames: jnp.ndarray, *, use_pallas: bool = False,
 
 
 def partition_stage(gammas: jnp.ndarray, *, P: int, m: int, k: int = 8,
-                    rounds: int = 8, gamma_dtype=None):
-    """Partition: vmapped JAG-M-HEUR over the (T, n1+1, n2+1) Gamma batch.
+                    rounds: int = 8, gamma_dtype=None, exact: bool = False,
+                    use_pallas: bool = False, interpret: bool = True):
+    """Partition: vmapped partitioner over the (T, n1+1, n2+1) Gamma batch.
 
-    Returns (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, m_max+1),
-    Lmax (T,)).
+    ``exact=False`` (default) runs JAG-M-HEUR; ``exact=True`` runs the
+    device-native exact JAG-PQ-OPT (``device.jag_pq_opt_device_impl``,
+    ``Q = m // P`` intervals per stripe — cuts bit-identical to the host
+    ``jagged.jag_pq_opt(orient='hor')``), with ``use_pallas`` routing its
+    column probes through the fused ``kernels.probe`` kernel.  Returns
+    (row_cuts (T, P+1), counts (T, P), col_cuts (T, P, *), Lmax (T,)).
     """
-    fn = functools.partial(device.jag_m_heur_device_impl, P=P, m=m, k=k,
-                           rounds=rounds, gamma_dtype=gamma_dtype)
+    if exact:
+        if m % P != 0:
+            raise ValueError(
+                f"exact planning needs m divisible by P (m={m}, P={P}): "
+                f"the exact device solver is the P x Q form")
+        fn = functools.partial(device.jag_pq_opt_device_impl, P=P, Q=m // P,
+                               k=max(k, 2), use_pallas_probe=use_pallas,
+                               interpret=interpret)
+    else:
+        fn = functools.partial(device.jag_m_heur_device_impl, P=P, m=m, k=k,
+                               rounds=rounds, gamma_dtype=gamma_dtype)
     return jax.vmap(fn)(gammas)
 
 
 def plan_frames(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
-                rounds: int = 8, gamma_dtype=jnp.float32,
-                use_pallas: bool = False, interpret: bool = True):
+                rounds: int = 8, gamma_dtype=None,
+                use_pallas: bool = False, interpret: bool = True,
+                exact: bool = False):
     """The full unjitted chain: ingest -> SAT -> partition.
 
     Every intermediate (frames, Gammas) stays on the executing device;
     the returned pytree is the O(T * m) cut vectors only — the "cut
     collect" stage is whoever fetches them (the host, or the all-gather
-    implicit in reading a sharded result).
+    implicit in reading a sharded result).  ``exact=True`` swaps the
+    partition stage for the exact device JAG-PQ-OPT and defaults the
+    accumulator to int32 (see :func:`resolve_gamma_dtype`) — with
+    ``use_pallas`` this is the fused SAT -> probe -> cut path, no host
+    round-trip between integral image and cuts.
     """
+    gamma_dtype = resolve_gamma_dtype(gamma_dtype, exact=exact)
     g = sat_stage(ingest_stage(frames, gamma_dtype=gamma_dtype),
                   use_pallas=use_pallas, interpret=interpret)
     return partition_stage(g, P=P, m=m, k=k, rounds=rounds,
-                           gamma_dtype=gamma_dtype)
+                           gamma_dtype=gamma_dtype, exact=exact,
+                           use_pallas=use_pallas, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -166,21 +199,24 @@ def _dp_spec(mesh):
 
 @functools.lru_cache(maxsize=None)
 def _sharded_plan_fn(mesh, P, m, k, rounds, gamma_dtype, use_pallas,
-                     interpret):
+                     interpret, exact):
     """jit(shard_map(chain)) for one (mesh, signature) — cached so repeat
     calls reuse the compiled executable."""
     from jax.experimental.shard_map import shard_map
     spec, _ = _dp_spec(mesh)
     body = functools.partial(plan_frames, P=P, m=m, k=k, rounds=rounds,
                              gamma_dtype=gamma_dtype, use_pallas=use_pallas,
-                             interpret=interpret)
+                             interpret=interpret, exact=exact)
+    # the exact path's while_loop has no shard_map replication rule;
+    # every computation is frame-local so skipping the check is sound
     return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
-                             out_specs=spec))
+                             out_specs=spec, check_rep=not exact))
 
 
 def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
-                rounds: int = 8, gamma_dtype=jnp.float32,
-                use_pallas: bool = False, interpret: bool = True):
+                rounds: int = 8, gamma_dtype=None,
+                use_pallas: bool = False, interpret: bool = True,
+                exact: bool = False):
     """SAT + partitioner for a whole (T, n1, n2) stream.
 
     ``mesh=None`` is the single-device reference (identical to
@@ -189,14 +225,20 @@ def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
     slice and only the cut vectors leave it.  Cuts are bit-identical
     across mesh sizes.  When T does not divide the DP size, the stream is
     zero-padded on device and the padding trimmed from the result.
+
+    ``exact=True`` plans every frame with the exact device JAG-PQ-OPT
+    (``Q = m // P``) instead of the heuristic — cuts bit-identical to
+    the host ``jagged.jag_pq_opt(orient='hor')`` per frame, sharded over
+    the mesh exactly like the heuristic path.
     """
     from repro.rebalance import batch_device
     frames = jnp.asarray(frames)
     _check_finite(frames, 0, frames.shape[0], what="plan_stream")
+    gamma_dtype = resolve_gamma_dtype(gamma_dtype, exact=exact)
     if mesh is None:
         return batch_device.plan_stream(
             frames, P=P, m=m, k=k, rounds=rounds, gamma_dtype=gamma_dtype,
-            use_pallas=use_pallas, interpret=interpret)
+            use_pallas=use_pallas, interpret=interpret, exact=exact)
     from jax.sharding import NamedSharding
     spec, D = _dp_spec(mesh)
     T = frames.shape[0]
@@ -207,7 +249,7 @@ def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
                                frames.dtype)])
     fr = jax.device_put(frames, NamedSharding(mesh, spec))
     out = _sharded_plan_fn(mesh, P, m, k, rounds, jnp.dtype(gamma_dtype),
-                           use_pallas, interpret)(fr)
+                           use_pallas, interpret, exact)(fr)
     if Tpad != T:
         out = jax.tree_util.tree_map(lambda x: x[:T], out)
     return out
@@ -219,8 +261,9 @@ def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
 
 def iter_plan_slices(frames, *, P: int, m: int, mesh=None,
                      slice_size: int | None = None, k: int = 8,
-                     rounds: int = 8, gamma_dtype=jnp.float32,
-                     use_pallas: bool = False, interpret: bool = True):
+                     rounds: int = 8, gamma_dtype=None,
+                     use_pallas: bool = False, interpret: bool = True,
+                     exact: bool = False):
     """Yield ``(t0, t1, batched_slice)`` over the stream, planned lazily.
 
     All slices are dispatched before the first yield — jax dispatch is
@@ -245,14 +288,14 @@ def iter_plan_slices(frames, *, P: int, m: int, mesh=None,
         pending.append((t0, t1, plan_stream(
             frames[t0:t1], P=P, m=m, mesh=mesh, k=k, rounds=rounds,
             gamma_dtype=gamma_dtype, use_pallas=use_pallas,
-            interpret=interpret)))
+            interpret=interpret, exact=exact)))
     yield from pending
 
 
 def plan_iter(frames, *, P: int, m: int, mesh=None,
               slice_size: int | None = None, k: int = 8, rounds: int = 8,
-              gamma_dtype=jnp.float32, use_pallas: bool = False,
-              interpret: bool = True):
+              gamma_dtype=None, use_pallas: bool = False,
+              interpret: bool = True, exact: bool = False):
     """Per-frame :class:`~repro.rebalance.batch_device.Plan` iterator.
 
     The lazy flattening of :func:`iter_plan_slices` — what the runtime's
@@ -263,16 +306,17 @@ def plan_iter(frames, *, P: int, m: int, mesh=None,
     for _, _, batched in iter_plan_slices(
             frames, P=P, m=m, mesh=mesh, slice_size=slice_size, k=k,
             rounds=rounds, gamma_dtype=gamma_dtype, use_pallas=use_pallas,
-            interpret=interpret):
+            interpret=interpret, exact=exact):
         yield from batch_device.unstack_plans(batched, shape)
 
 
 def plan_host(frames, *, P: int, m: int, mesh=None, k: int = 8,
-              rounds: int = 8, gamma_dtype=jnp.float32,
-              use_pallas: bool = False, interpret: bool = True):
+              rounds: int = 8, gamma_dtype=None,
+              use_pallas: bool = False, interpret: bool = True,
+              exact: bool = False):
     """Whole-stream planning to host Plans (one dispatch, no slicing)."""
     from repro.rebalance import batch_device
     batched = plan_stream(frames, P=P, m=m, mesh=mesh, k=k, rounds=rounds,
                           gamma_dtype=gamma_dtype, use_pallas=use_pallas,
-                          interpret=interpret)
+                          interpret=interpret, exact=exact)
     return batch_device.unstack_plans(batched, tuple(frames.shape[1:]))

@@ -178,6 +178,12 @@ def straggler_rebalance(assignments: list[Assignment],
     dead (``speed=0``) replica none, so one failed replica no longer
     re-straggles the rebalanced batch.
     """
+    if len(progress) != len(assignments):
+        # zip would silently truncate — and a short progress list would
+        # drop whole replicas' queues from the rebalanced plan
+        raise ValueError(
+            f"progress has {len(progress)} entries for "
+            f"{len(assignments)} replicas; every replica must report")
     remaining: list[Request] = []
     for a, prog in zip(assignments, progress):
         keep = int(len(a.requests) * prog)

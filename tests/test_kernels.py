@@ -58,6 +58,45 @@ def test_rectload_matches_ref(n1, n2, P, Q, rng):
     np.testing.assert_allclose(np.asarray(got).sum(), a.sum(), rtol=1e-6)
 
 
+@pytest.mark.parametrize("S,n,K,cap", [
+    (1, 1, 1, 1), (3, 17, 5, 4), (8, 128, 16, 7), (5, 300, 3, 12),
+])
+def test_probe_counts_pallas_matches_ref_and_host(S, n, K, cap, rng):
+    """Probe kernel == jnp oracle == the host scalar greedy, including
+    the cap+1 infeasible sentinel and all-zero stripes."""
+    from repro.core import oned
+    from repro.kernels.probe import probe_counts, probe_counts_ref
+
+    loads = rng.integers(0, 40, (S, n)).astype(np.int64)
+    loads[0] = 0  # degenerate all-zero stripe
+    p = np.cumsum(np.concatenate([np.zeros((S, 1), np.int64), loads],
+                                 axis=1), axis=1).astype(np.int32)
+    # candidate levels spanning infeasible (tiny) through trivial (total)
+    Ls = np.stack([np.linspace(1, max(int(p[s, -1]), 2), K)
+                   for s in range(S)]).astype(np.int32)
+    got = np.asarray(probe_counts(jnp.asarray(p), jnp.asarray(Ls), cap,
+                                  use_pallas=True, interpret=True))
+    want = np.asarray(probe_counts_ref(jnp.asarray(p), jnp.asarray(Ls),
+                                       cap))
+    np.testing.assert_array_equal(got, want)
+    for s in range(S):
+        for j in range(K):
+            assert got[s, j] == oned.probe_count(
+                p[s].astype(np.int64), int(Ls[s, j]), cap)
+
+
+def test_pallas_interpret_default_env_override(monkeypatch):
+    from repro.kernels.probe import pallas_interpret_default
+
+    monkeypatch.setenv("JAX_PALLAS_INTERPRET", "1")
+    assert pallas_interpret_default() is True
+    monkeypatch.setenv("JAX_PALLAS_INTERPRET", "0")
+    assert pallas_interpret_default() is False
+    monkeypatch.delenv("JAX_PALLAS_INTERPRET")
+    import jax
+    assert pallas_interpret_default() is (jax.default_backend() != "tpu")
+
+
 def test_rectload_degenerate_stripes(rng):
     """Empty stripes / empty columns are legal (zero loads)."""
     a = rng.integers(0, 10, (20, 20)).astype(np.int32)

@@ -116,6 +116,50 @@ print("SHARDED-BIT-IDENTICAL")
 
 
 # ---------------------------------------------------------------------------
+# exact device solver through the planner (plan_stream(exact=True))
+
+PE, ME = 2, 10  # exact path needs m % P == 0 (Q = 5)
+
+
+def test_plan_stream_exact_matches_host_solver():
+    """Per-frame Lmax from the exact device path equals the host
+    JAG-PQ-OPT bottleneck, and every unstacked Plan validates."""
+    from repro.core import jagged, prefix
+    T, n = 5, 12
+    frames = stream.drifting_hotspot(T, n, n, seed=3)
+    out = batch_device.plan_stream(jnp.asarray(frames), P=PE, m=ME,
+                                   exact=True)
+    lmax = np.asarray(out[3])
+    for t in range(T):
+        g = prefix.prefix_sum_2d(frames[t])
+        want = jagged.jag_pq_opt(g, ME, P=PE, Q=ME // PE, orient="hor")
+        assert int(lmax[t]) == int(want.max_load(g)), t
+    for plan in batch_device.unstack_plans(out, (n, n)):
+        plan.validate()
+
+
+def test_plan_stream_exact_rejects_indivisible_m():
+    frames = stream.drifting_hotspot(3, 8, 8, seed=0)
+    with pytest.raises(ValueError, match="divisible by P"):
+        batch_device.plan_stream(jnp.asarray(frames), P=3, m=10,
+                                 exact=True)
+
+
+@pytest.mark.parametrize("D,T", [(1, 5), (2, 7), (8, 13)])
+def test_sharded_exact_matches_single_device(D, T):
+    """The exact path shards like the heuristic one: bit-identical cuts
+    and bottlenecks on a D-device mesh, including ragged T."""
+    if jax.device_count() < D:
+        pytest.skip(f"needs {D} devices (the CI multi-device leg forces 8)")
+    frames = stream.drifting_hotspot(T, 16, 16, seed=5)
+    ref = batch_device.plan_stream(jnp.asarray(frames), P=PE, m=ME,
+                                   exact=True)
+    got = planner.plan_stream(frames, P=PE, m=ME, exact=True,
+                              mesh=ctx.planner_mesh(D))
+    _assert_same(got, ref)
+
+
+# ---------------------------------------------------------------------------
 # lazy per-slice iteration
 
 

@@ -212,6 +212,182 @@ def test_grep_constraint_single_bisection_loop():
     assert hits <= 1, hits
 
 
+# ---------------------------------------------------------------------------
+# Device-native exact solvers: bit-identical to the host engine.
+#
+# The device ports replay the identical wide-bisection candidate schedule
+# (search.interior_candidates) under lax.while_loop, so integer instances
+# must return the *same* minimal feasible bottleneck — and for the 1D and
+# JAG-PQ solvers the same greedy-collapsed cuts — as the host solvers.
+# Instances are padded to a few fixed shapes so the sweep costs a handful
+# of jit compiles, not one per instance.
+
+
+_PAD_N = 48  # fixed 1D shape: every instance padded to 48 elements
+
+
+def _padded_prefix(rng, float_dtype=False):
+    """A _random_prefix instance extended to _PAD_N elements by appending
+    zero-load elements (p stays a valid non-decreasing prefix; both host
+    and device solve the *same* padded instance)."""
+    p = _random_prefix(rng, float_dtype)
+    pad = np.full(_PAD_N + 1 - len(p), p[-1], dtype=p.dtype)
+    return np.concatenate([p, pad])
+
+
+def test_device_nicol_optimal_bit_identical_sweep():
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(1104)
+    ms = (1, 2, 3, 5, 8, 13)  # static arg: 6 compiles for 120 instances
+    for trial in range(120):
+        p = _padded_prefix(rng)
+        m = ms[trial % len(ms)]
+        cuts_h = oned.nicol_optimal(p, m)
+        cuts_d, bott_d = device.nicol_optimal_device(
+            jnp.asarray(p, jnp.int32), m)
+        np.testing.assert_array_equal(np.asarray(cuts_d), cuts_h,
+                                      err_msg=f"trial {trial} m={m}")
+        assert int(bott_d) == int(oned.max_interval_load(p, cuts_h)), \
+            (trial, m, p.tolist())
+
+
+def test_device_nicol_optimal_speeds_matches_host():
+    """Capacity-aware (speeds=) instances bisect on float relative load;
+    host and device must agree on the achieved relative bottleneck to
+    float tolerance, and the device cuts must realize it."""
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(7)
+    ms = (2, 3, 5)
+    for trial in range(36):
+        p = _padded_prefix(rng)
+        m = ms[trial % len(ms)]
+        sp = rng.uniform(0.25, 4.0, m)
+        sp[0] *= 2.0  # keep it non-uniform so the hetero path engages
+        cuts_h = oned.nicol_optimal(p, m, speeds=sp)
+        cuts_d, bott_d = device.nicol_optimal_device(
+            jnp.asarray(p, jnp.float32), m, speeds=jnp.asarray(
+                sp, jnp.float32))
+        rel_h = (np.diff(p[cuts_h]) / sp).max()
+        rel_d = (np.diff(p[np.asarray(cuts_d)]) / sp).max()
+        # both realize the same optimum up to f32 bisection tolerance
+        assert rel_d == pytest.approx(rel_h, rel=1e-5, abs=1e-6), \
+            (trial, m)
+        assert float(bott_d) == pytest.approx(rel_d, rel=1e-5, abs=1e-6)
+
+
+def test_device_nicol_optimal_float_boundary():
+    """Float loads whose sums are not exactly representable (the 1/3
+    adversary from test_float_boundary_realization): device f32 bisection
+    stays tolerance-equal to the host optimum."""
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(23)
+    ms = (2, 4, 7)
+    for trial in range(30):
+        vals = (rng.uniform(0, 1, _PAD_N) * (1 / 3)).astype(np.float32)
+        p = np.concatenate([[0.0], np.cumsum(vals)]).astype(np.float32)
+        m = ms[trial % len(ms)]
+        cuts_h = oned.nicol_optimal(p.astype(np.float64), m)
+        cuts_d, _ = device.nicol_optimal_device(jnp.asarray(p), m)
+        got = oned.max_interval_load(p.astype(np.float64),
+                                     np.asarray(cuts_d))
+        want = oned.max_interval_load(p.astype(np.float64), cuts_h)
+        assert got <= want * (1 + 1e-5) + 1e-6, (trial, m)
+
+
+def test_device_nicol_optimal_vmap_lanes_match_single_calls():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(3)
+    S, m = 8, 5
+    ps = np.stack([_padded_prefix(rng) for _ in range(S)])
+    batched = jax.vmap(
+        lambda p: device.nicol_optimal_device(p, m))(
+        jnp.asarray(ps, jnp.int32))
+    for s in range(S):
+        cuts_s, bott_s = device.nicol_optimal_device(
+            jnp.asarray(ps[s], jnp.int32), m)
+        np.testing.assert_array_equal(np.asarray(batched[0][s]),
+                                      np.asarray(cuts_s))
+        assert int(batched[1][s]) == int(bott_s)
+
+
+def test_device_jag_pq_opt_bit_identical_sweep():
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(11)
+    pqs = ((1, 2), (2, 2), (3, 4), (4, 3), (2, 5))  # 5 compiles
+    n1, n2 = 16, 12
+    for trial in range(60):
+        A = rng.integers(0, 30, (n1, n2)).astype(np.int64)
+        if trial % 5 == 0:
+            A[:, rng.integers(0, n2)] = 0  # degenerate column
+        if trial % 9 == 0:
+            A[rng.integers(0, n1)] = 0  # degenerate row
+        g = prefix.prefix_sum_2d(A)
+        P, Q = pqs[trial % len(pqs)]
+        part = jagged.jag_pq_opt(g, P * Q, P=P, Q=Q, orient="hor")
+        rc, counts, cc, lmax = device.jag_pq_opt_device(
+            jnp.asarray(g, jnp.int32), P=P, Q=Q)
+        assert int(lmax) == int(part.max_load(g)), (trial, P, Q)
+        # the realized device cuts achieve the same bottleneck
+        rc_np, cc_np = np.asarray(rc), np.asarray(cc)
+        got = 0
+        for s in range(P):
+            b, e = int(rc_np[s]), int(rc_np[s + 1])
+            for t in range(Q):
+                c0, c1 = int(cc_np[s, t]), int(cc_np[s, t + 1])
+                got = max(got, int(g[e, c1] - g[b, c1]
+                                   - g[e, c0] + g[b, c0]))
+        assert got == int(lmax), (trial, P, Q)
+
+
+def test_device_jag_m_opt_bottleneck_identical_sweep():
+    import jax.numpy as jnp
+    from repro.core import device
+
+    rng = np.random.default_rng(19)
+    ms = (2, 3, 5)  # 3 compiles
+    n1, n2 = 12, 10
+    for trial in range(25):
+        A = rng.integers(0, 25, (n1, n2)).astype(np.int64)
+        if trial % 6 == 0:
+            A[:, rng.integers(0, n2)] = 0
+        g = prefix.prefix_sum_2d(A)
+        m = ms[trial % len(ms)]
+        want = jagged.jag_m_opt(g, m, orient="hor").max_load(g)
+        rc, counts, cc, ns, lmax = device.jag_m_opt_device(
+            jnp.asarray(g, jnp.int32), m=m)
+        assert int(lmax) == int(want), (trial, m, A.tolist())
+        assert int(np.asarray(counts)[:int(ns)].sum()) == m
+
+
+def test_device_registry_variants_match_host():
+    """The registered jag-pq-opt-device wrapper (with orientation dispatch
+    and speeds= handling) returns partitions with host-identical
+    bottlenecks."""
+    from repro.core import registry
+
+    rng = np.random.default_rng(29)
+    for trial in range(10):
+        A = rng.integers(0, 20, (10, 14)).astype(np.int64)
+        g = prefix.prefix_sum_2d(A)
+        for name_d, name_h in (("jag-pq-opt-device", "jag-pq-opt"),
+                               ("jag-pq-opt-device-hor", "jag-pq-opt-hor")):
+            got = registry.get(name_d)(g, 6, P=2, Q=3)
+            want = registry.get(name_h)(g, 6, P=2, Q=3)
+            assert got.is_valid()
+            assert got.max_load(g) == want.max_load(g), (trial, name_d)
+
+
 def test_perf_smoke_no_python_loop_regression():
     """Engine-backed hot paths stay well under seed-era runtimes.
 

@@ -7,6 +7,7 @@ try:
 except ImportError:  # minimal containers: fixed-seed shim (tests/_hyp.py)
     from _hyp import given, settings, strategies as st
 
+from repro.core import oned
 from repro.dist import cp_balance, moe_placement
 from repro.serve import batcher
 
@@ -34,6 +35,51 @@ def test_straggler_rebalance_covers_remaining():
               ) + len(plan[2].requests) + (
         len(plan[3].requests) - int(len(plan[3].requests) * 0.9))
     assert remaining == expect
+
+
+def test_straggler_rebalance_length_mismatch_raises():
+    """A short progress list used to be zip-truncated, silently dropping
+    whole replicas' queues from the rebalanced plan; both directions of
+    the mismatch must raise instead."""
+    reqs = [batcher.Request(i, 100 + i) for i in range(12)]
+    plan = batcher.plan(reqs, 4)
+    with pytest.raises(ValueError, match="every replica must report"):
+        batcher.straggler_rebalance(plan, [1.0, 0.5, 0.0])
+    with pytest.raises(ValueError, match="every replica must report"):
+        batcher.straggler_rebalance(plan, [1.0, 0.5, 0.0, 0.9, 0.2])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 2048), min_size=1, max_size=60),
+       st.integers(1, 8))
+def test_direct_cut_speeds_uniform_matches_direct_cut(lens, R):
+    """At uniform speeds the capacity-proportional DirectCut degenerates to
+    the paper's DirectCut — same targets, same searchsorted — so the cuts
+    must be bit-identical."""
+    p = np.concatenate([[0], np.cumsum(np.asarray(lens, dtype=np.int64))])
+    got = batcher._direct_cut_speeds(p, np.ones(R, dtype=np.float64))
+    want = oned.direct_cut(p, R)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 2048), min_size=1, max_size=60),
+       st.integers(2, 8), st.integers(0, 100))
+def test_direct_cut_speeds_dead_replica_and_coverage(lens, R, dead_seed):
+    """Dead (speed=0) replicas get exactly empty ranges; the cuts always
+    cover [0, n] monotonically so every request lands exactly once."""
+    dead = dead_seed % R
+    sp = np.ones(R, dtype=np.float64)
+    sp[dead] = 0.0
+    p = np.concatenate([[0], np.cumsum(np.asarray(lens, dtype=np.int64))])
+    cuts = batcher._direct_cut_speeds(p, sp)
+    n = len(p) - 1
+    assert cuts[0] == 0 and cuts[-1] == n
+    assert (np.diff(cuts) >= 0).all()
+    assert cuts[dead + 1] == cuts[dead], "dead replica must get no requests"
+    # live replicas partition the full range: total assigned == total work
+    assigned = sum(int(p[cuts[i + 1]] - p[cuts[i]]) for i in range(R))
+    assert assigned == int(p[-1])
 
 
 def test_moe_placement_beats_uniform():
