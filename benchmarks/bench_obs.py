@@ -1,0 +1,52 @@
+"""Observability overhead gate: tracing OFF must cost < 3%.
+
+The obs layer's disabled path is designed to be nearly free — span()
+returns a no-op singleton on one attribute check and counters are plain
+int attribute increments — but "nearly free" is a *measured* property,
+not a design note.  This bench times the instrumented hot path
+(``jag-pq-opt`` m=1000, the heaviest host case in bench_partitioner)
+with tracing disabled and emits it as ``obs.overhead.jag-pq-opt.m1000``
+carrying ``gate_threshold: 1.03``: compare.py gates that record at 3%
+over the committed pre-instrumentation baseline instead of the fleet
+default, so instrumentation creep fails CI the moment it shows up.
+
+A second record, ``obs.traced.*``, times the same case under
+``registry.explain`` (tracing ON) — ungated against a tight threshold,
+recorded so the cost of *enabled* tracing stays visible in the trail.
+"""
+from __future__ import annotations
+
+from repro import obs
+from repro.core import prefix, registry
+from .common import emit, timeit
+
+_CASE = ("jag-pq-opt", 1000, {"P": 25, "Q": 40})
+
+
+def run(quick: bool = True) -> dict:
+    n = 512
+    name, m, kw = _CASE
+    g = prefix.prefix_sum_2d(prefix.uniform_instance(n, n, delta=1.2))
+    assert not obs.enabled(), "obs bench needs tracing disabled at entry"
+
+    # the off path is gated at 3%: best-of-many is the noise-free floor
+    # estimate this tight a gate needs (scheduler jitter on a ~150ms
+    # host solve is far above 3% at low repeat counts)
+    part, dt_off = timeit(registry.partition, name, g, m,
+                          repeats=10 if quick else 15, **kw)
+    bott = float(part.max_load(g))
+    emit(f"obs.overhead.{name}.m{m}", dt_off, f"Lmax={bott:.0f}",
+         bottleneck=bott, m=m, n=n, gate_threshold=1.03)
+
+    report, dt_on = timeit(registry.explain, name, g, m,
+                           repeats=3 if quick else 5, **kw)
+    assert report.bottleneck == bott, (report.bottleneck, bott)
+    assert report.spans, "explain() returned no spans under tracing"
+    assert report.counters["probe_calls"] > 0, report.counters
+    assert not obs.enabled(), "explain() leaked tracing state"
+    ratio = dt_on / dt_off
+    emit(f"obs.traced.{name}.m{m}", dt_on,
+         f"Lmax={report.bottleneck:.0f};on_off={ratio:.3f}x",
+         bottleneck=report.bottleneck, m=m, n=n,
+         overhead_vs_off=round(ratio, 4))
+    return {"off": dt_off, "on": dt_on, "ratio": ratio}

@@ -22,7 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import prefix, registry
-from .common import emit, timeit
+from .common import emit, measure_partition, timeit
 
 # (name, m, extra kwargs) — m=1000 is not square, so JAG-PQ gets an
 # explicit 25x40 grid; m-way variants take m directly.
@@ -42,12 +42,10 @@ def run(quick: bool = True) -> dict:
     g = prefix.prefix_sum_2d(A)
     out = {}
     for name, m, kw in CASES:
-        part, dt = timeit(registry.partition, name, g, m,
-                          repeats=2 if quick else 5, **kw)
-        bott = part.max_load(g)
-        out[(name, m)] = (dt, bott)
-        emit(f"partitioner.{name}.m{m}", dt, f"Lmax={bott:.0f}",
-             bottleneck=bott, m=m, n=n)
+        report, rec = measure_partition(
+            f"partitioner.{name}.m{m}", name, g, m,
+            repeats=2 if quick else 5, fields={"n": n}, **kw)
+        out[(name, m)] = (rec["us_per_call"] / 1e6, report.bottleneck)
 
     # device-native exact JAG-PQ, batched under vmap (see module docstring)
     import jax

@@ -1,11 +1,46 @@
 """Shared benchmark helpers: timing + CSV emission + JSON recording."""
 from __future__ import annotations
 
+import os
+import platform
+import sys
 import time
 
 # Every emit() lands here; ``run.py --json FILE`` dumps it machine-readably
 # so the perf trajectory is tracked PR-over-PR.
 RECORDS: list[dict] = []
+
+# measure_partition caches its PartitionReports here by record name, so a
+# figure script reuses the exact record (spans, counters, bottleneck) a
+# prior bench already measured instead of re-timing the same case.
+REPORTS: dict = {}
+
+_ENV: dict | None = None
+
+
+def environment() -> dict:
+    """Environment metadata stamped into every JSON record (satellite 1).
+
+    Two runs whose records disagree here are not comparable — compare.py
+    prints a mismatch warning next to its ratios.  jax imports lazily so
+    numpy-only figure scripts keep working without it.
+    """
+    global _ENV
+    if _ENV is None:
+        import numpy as np
+        env = {"python": platform.python_version(),
+               "platform": platform.platform(),
+               "numpy": np.__version__,
+               "xla_flags": os.environ.get("XLA_FLAGS", "")}
+        try:
+            import jax
+            env["jax"] = jax.__version__
+            env["backend"] = jax.default_backend()
+            env["device_count"] = jax.device_count()
+        except Exception:
+            env["jax"] = None
+        _ENV = env
+    return _ENV
 
 
 def timeit(fn, *args, repeats: int = 3, **kw):
@@ -23,3 +58,38 @@ def emit(name: str, seconds: float, derived: str, **fields) -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
     RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
                     "derived": derived, **fields})
+
+
+def record_for(name: str) -> dict | None:
+    """The already-emitted record called ``name``, if any (latest wins)."""
+    for r in reversed(RECORDS):
+        if r["name"] == name:
+            return r
+    return None
+
+
+def measure_partition(name: str, algo: str, gamma, m: int, *,
+                      repeats: int = 3, fields: dict | None = None, **kw):
+    """Time one registry partition via ``explain`` and emit one record.
+
+    The single measurement point the partitioner benches and every
+    figure script share (satellite 6): the emitted record carries the
+    bottleneck, LI, per-phase span totals and engine counters from the
+    :class:`~repro.obs.report.PartitionReport`, and is cached by name —
+    a second call with the same ``name`` returns the cached
+    ``(report, record)`` without re-timing, so figures consume exactly
+    the records the CI gate compares.
+    """
+    if name in REPORTS:
+        return REPORTS[name], record_for(name)
+    from repro.core import registry
+    report, dt = timeit(registry.explain, algo, gamma, m,
+                        repeats=repeats, **kw)
+    li = report.imbalance
+    emit(name, dt, f"Lmax={report.bottleneck:.0f};LI={li * 100:.2f}%",
+         bottleneck=report.bottleneck, m=int(m), li=round(li, 6),
+         algo=algo, spans=report.span_totals(),
+         counters={k: v for k, v in report.counters.items() if v},
+         **(fields or {}))
+    REPORTS[name] = report
+    return report, RECORDS[-1]

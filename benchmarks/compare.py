@@ -69,6 +69,37 @@ def load(path: str) -> dict[str, dict]:
         return {r["name"]: r for r in json.load(f)}
 
 
+_ENV_KEYS = ("jax", "backend", "device_count", "numpy", "python",
+             "platform", "xla_flags")
+
+
+def env_of(recs: dict[str, dict]) -> dict | None:
+    """The environment stamp shared by a dump's records, if any."""
+    for r in recs.values():
+        if isinstance(r.get("env"), dict):
+            return r["env"]
+    return None
+
+
+def env_mismatches(base_env: dict | None, new_env: dict | None
+                   ) -> list[str]:
+    """Human-readable env differences between baseline and candidate.
+
+    Advisory only (satellite 1): the median normalization already
+    absorbs machine-speed differences, but a jax upgrade or a different
+    device count is worth seeing next to a red ratio.
+    """
+    if base_env is None or new_env is None:
+        if base_env is None and new_env is None:
+            return []
+        side = "baseline" if base_env is None else "candidate"
+        return [f"{side} records carry no environment stamp"]
+    return [f"{k}: baseline={base_env[k]!r} candidate={new_env[k]!r}"
+            for k in _ENV_KEYS
+            if k in base_env and k in new_env
+            and base_env[k] != new_env[k]]
+
+
 def merge_min(paths: list[str]) -> dict[str, dict]:
     """Per-record best-of across runs (min us_per_call wins)."""
     out: dict[str, dict] = {}
@@ -98,6 +129,8 @@ def main() -> None:
         ap.error("need at least one fresh run and a baseline")
 
     new, base = merge_min(args.files[:-1]), load(args.files[-1])
+    for diff in env_mismatches(env_of(base), env_of(new)):
+        print(f"~ env mismatch: {diff}")
     matched = [n for n in sorted(base) if n in new]
     ratios = {n: new[n]["us_per_call"] / max(base[n]["us_per_call"], 1e-9)
               for n in matched}
@@ -126,12 +159,18 @@ def main() -> None:
             continue
         b, n = base[name], new[name]
         rel = ratios[name] / norm
-        flag = "REGRESSION" if rel > args.threshold else "ok"
-        print(f"{'!' if rel > args.threshold else ' '} {name}: "
+        # a record may carry its own (tighter) gate — the obs overhead
+        # bench ships gate_threshold 1.03, far below the fleet default
+        thr = float(b.get("gate_threshold",
+                          n.get("gate_threshold", args.threshold)))
+        flag = "REGRESSION" if rel > thr else "ok"
+        print(f"{'!' if rel > thr else ' '} {name}: "
               f"{b['us_per_call']:.1f} -> {n['us_per_call']:.1f} us "
-              f"({ratios[name]:.2f}x raw, {rel:.2f}x normalized) {flag}")
-        if rel > args.threshold:
-            failures.append(f"{name} {rel:.2f}x slower (normalized)")
+              f"({ratios[name]:.2f}x raw, {rel:.2f}x normalized, "
+              f"gate {thr}x) {flag}")
+        if rel > thr:
+            failures.append(f"{name} {rel:.2f}x slower (normalized, "
+                            f"gate {thr}x)")
         if "bottleneck" in b and "bottleneck" in n \
                 and n["bottleneck"] != b["bottleneck"]:
             failures.append(f"{name} bottleneck changed "

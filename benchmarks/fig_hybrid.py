@@ -12,8 +12,8 @@ import functools
 
 import numpy as np
 
-from repro.core import hybrid, jagged, prefix, registry
-from .common import emit, timeit
+from repro.core import hybrid, jagged, prefix
+from .common import emit, measure_partition
 
 
 def run(quick: bool = True) -> dict:
@@ -25,30 +25,30 @@ def run(quick: bool = True) -> dict:
     p1 = functools.partial(jagged.jag_m_heur, orient="hor")
     slow = "opt" if quick else "pq"
 
-    base = jagged.jag_m_heur(g, m).load_imbalance(g)
-    emit("fig14.jag-m-heur", 0.0, f"LI={base * 100:.2f}%")
+    rep_base, _ = measure_partition("fig14.jag-m-heur", "jag-m-heur", g, m,
+                                    repeats=1, fields={"n": n})
+    base = rep_base.imbalance
 
     results = {}
     corr_e, corr_a = [], []
     for P in hybrid.candidate_P_values(m, max(int(np.sqrt(m)), 2))[:6]:
         part1 = p1(g, P)
         eli = hybrid.expected_li(g, part1, m)
-        part, dt = timeit(hybrid.hybrid, g, m, P, slow=slow, repeats=1)
-        li = part.load_imbalance(g)
+        report, _ = measure_partition(
+            f"fig14.hybrid.P{P}", "hybrid", g, m, repeats=1,
+            fields={"n": n, "expected_li": round(eli, 6)}, P=P, slow=slow)
+        li = report.imbalance
         results[P] = li
         corr_e.append(eli)
         corr_a.append(li)
-        emit(f"fig14.hybrid.P{P}", dt,
-             f"LI={li * 100:.2f}%;expected={eli * 100:.2f}%")
 
-    auto, dt = timeit(registry.partition, "hybrid", g, m, repeats=1)
-    li_auto = auto.load_imbalance(g)
-    emit("fig16.hybrid-auto", dt, f"LI={li_auto * 100:.2f}%")
-    fs, dt_fs = timeit(registry.partition, "hybrid_fastslow", g, m,
-                       repeats=1)
-    li_fs = fs.load_imbalance(g)
+    rep_auto, _ = measure_partition("fig16.hybrid-auto", "hybrid", g, m,
+                                    repeats=1, fields={"n": n})
+    li_auto = rep_auto.imbalance
+    rep_fs, _ = measure_partition("fig16.hybrid-fastslow", "hybrid_fastslow",
+                                  g, m, repeats=1, fields={"n": n})
+    li_fs = rep_fs.imbalance
     assert li_fs <= li_auto + 1e-9  # exhaustive refinement never loses
-    emit("fig16.hybrid-fastslow", dt_fs, f"LI={li_fs * 100:.2f}%")
     # expected-vs-achieved correlate (Fig. 15) when phase 2 is strong
     if len(corr_e) >= 3 and np.std(corr_e) > 0 and np.std(corr_a) > 0:
         r = float(np.corrcoef(corr_e, corr_a)[0, 1])

@@ -6,10 +6,8 @@ sit in between.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import prefix, registry
-from .common import emit, timeit
+from repro.core import prefix
+from .common import measure_partition
 
 ALGOS = ["rect-uniform", "rect-nicol", "jag-pq-heur", "jag-pq-opt",
          "jag-m-heur", "jag-m-heur-probe", "hier-rb", "hier-relaxed"]
@@ -23,10 +21,9 @@ def run(quick: bool = True) -> dict:
     out = {}
     for m in ms:
         for name in ALGOS:
-            part, dt = timeit(registry.partition, name, g, m, repeats=1)
-            li = part.load_imbalance(g)
-            out[(name, m)] = li
-            emit(f"fig3.{name}.m{m}", dt, f"LI={li * 100:.2f}%")
+            report, _ = measure_partition(f"fig3.{name}.m{m}", name, g, m,
+                                          repeats=1, fields={"n": n})
+            out[(name, m)] = report.imbalance
     # the paper's ordering must hold on the largest m
     m = ms[-1]
     assert out[("jag-m-heur-probe", m)] <= out[("jag-pq-opt", m)] + 1e-9

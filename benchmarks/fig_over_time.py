@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import prefix, registry
-from .common import emit, timeit
+from repro.core import prefix
+from .common import emit, measure_partition
 
 ALGOS = ["rect-nicol", "jag-pq-heur", "jag-m-heur", "jag-m-heur-probe",
          "hier-rb", "hier-relaxed"]
@@ -25,8 +25,11 @@ def run(quick: bool = True) -> dict:
         A = prefix.pic_like_instance(n, n, iteration=it)
         g = prefix.prefix_sum_2d(A)
         for name in ALGOS:
-            part, dt = timeit(registry.partition, name, g, m, repeats=1)
-            series[name].append(part.load_imbalance(g))
+            report, _ = measure_partition(
+                f"fig4.{name}.m{m}.it{it}", name, g, m, repeats=1,
+                fields={"n": n, "iteration": it})
+            series[name].append(report.imbalance)
+    # the aggregate rows summarize the per-iteration records just emitted
     for name, ser in series.items():
         emit(f"fig4.{name}.m{m}", 0.0,
              f"LI_mean={np.mean(ser) * 100:.2f}%;LI_max={np.max(ser) * 100:.2f}%")

@@ -6,8 +6,8 @@ paper's qualitative result for this dataset.
 """
 from __future__ import annotations
 
-from repro.core import prefix, registry
-from .common import emit, timeit
+from repro.core import prefix
+from .common import measure_partition
 
 ALGOS = ["rect-uniform", "rect-nicol", "jag-pq-heur", "jag-m-heur-probe",
          "hier-rb", "hier-relaxed"]
@@ -20,10 +20,9 @@ def run(quick: bool = True) -> dict:
     m = 1024
     out = {}
     for name in ALGOS:
-        part, dt = timeit(registry.partition, name, g, m, repeats=1)
-        li = part.load_imbalance(g)
-        out[name] = li
-        emit(f"fig12.{name}.m{m}", dt, f"LI={li * 100:.2f}%")
+        report, _ = measure_partition(f"fig12.{name}.m{m}", name, g, m,
+                                      repeats=1, fields={"n": n})
+        out[name] = report.imbalance
     # hierarchical beats jagged on sparse meshes (paper Fig. 12)
     assert min(out["hier-rb"], out["hier-relaxed"]) <= \
         out["jag-m-heur-probe"] + 1e-9

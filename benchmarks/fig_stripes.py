@@ -2,10 +2,8 @@
 against the Theorem 3 worst-case guarantee (Uniform instance)."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import jagged, prefix
-from .common import emit, timeit
+from repro.core import prefix
+from .common import measure_partition
 
 
 def theorem3_bound(m, P, n1, n2, delta):
@@ -22,10 +20,11 @@ def run(quick: bool = True) -> dict:
     delta = A.max() / A.min()
     out = {}
     for P in [5, 10, 20, 28, 40, 80, 160]:
-        part, dt = timeit(jagged.jag_m_heur, g, m, P=P, repeats=1)
-        li = part.load_imbalance(g)
         wc = theorem3_bound(m, P, n, n, delta) - 1
+        report, _ = measure_partition(
+            f"fig5.P{P}", "jag-m-heur", g, m, repeats=1,
+            fields={"n": n, "P": P, "worst_case": round(wc, 6)}, P=P)
+        li = report.imbalance
         out[P] = (li, wc)
-        emit(f"fig5.P{P}", dt, f"LI={li * 100:.3f}%;worst_case={wc * 100:.1f}%")
         assert li <= wc + 1e-9, (P, li, wc)
     return out

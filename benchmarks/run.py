@@ -24,6 +24,7 @@ BENCHES = [
     ("bench_hybrid", "bench_hybrid"),
     ("bench_rebalance", "bench_rebalance"),
     ("bench_faults", "bench_faults"),
+    ("obs", "bench_obs"),
     ("moe_placement", "bench_moe_placement"),
     ("cp_balance", "bench_cp_balance"),
     ("kernels", "bench_kernels"),
@@ -63,7 +64,11 @@ def main() -> None:
             traceback.print_exc()
     if args.json:
         # dump whatever was collected even when a bench failed: partial
-        # perf trails beat none
+        # perf trails beat none.  Every record carries the environment it
+        # was measured in — compare.py warns when baselines don't match.
+        env = common.environment()
+        for r in common.RECORDS:
+            r.setdefault("env", env)
         with open(args.json, "w") as f:
             json.dump(common.RECORDS, f, indent=1)
         print(f"# wrote {len(common.RECORDS)} records to {args.json}",

@@ -43,6 +43,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import trace as _trace
+
 from . import jagged, oned, search
 from .jagged import _proportional_counts
 from .stripecache import SubgridView
@@ -378,14 +380,18 @@ def _hybrid(gamma: np.ndarray, m: int, P: int | None, p_min: int | None,
     root = SubgridView(gamma)
     scan = _Phase1Scan(root)
     if P is None:
-        P = scan.best_P(m, p_min)
-    parts, loads = scan.parts(P)
-    qs = _proportional_counts(loads, m)
-    sub = _phase2_fast(root, parts, qs)
+        with _trace.span("hybrid.scan_P", m=int(m)):
+            P = scan.best_P(m, p_min)
+    with _trace.span("hybrid.phase1", P=int(P)):
+        parts, loads = scan.parts(P)
+        qs = _proportional_counts(loads, m)
+    with _trace.span("hybrid.phase2_fast", parts=len(parts)):
+        sub = _phase2_fast(root, parts, qs)
     if refine:
         limit = len(parts) if slow_parts is None else slow_parts
-        _refine(root, parts, qs, sub, slow,
-                exhaustive=exhaustive, limit=limit)
+        with _trace.span("hybrid.refine"):
+            _refine(root, parts, qs, sub, slow,
+                    exhaustive=exhaustive, limit=limit)
     rects: list[Rect] = []
     for part, (_, rs) in zip(parts, sub):
         rects.extend(_offset(rs, part))

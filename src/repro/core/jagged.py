@@ -30,6 +30,8 @@ import functools
 
 import numpy as np
 
+from repro.obs import trace as _trace
+
 from . import oned, search
 from .prefix import row_prefix, transpose_gamma
 from .stripecache import StripeView, SubgridView, stripe_matrix
@@ -284,15 +286,18 @@ def jag_pq_opt(gamma: np.ndarray, m: int, P: int | None = None,
     if speeds is not None:
         return _jag_pq_opt_hetero(gamma, m, P, Q, speeds)
     lo = float(gamma[-1, -1]) / m
-    heur = jag_pq_heur(gamma, m, P=P, Q=Q, orient="hor")
-    hi = heur.max_load(gamma)
+    with _trace.span("jag_pq_opt.bound", P=P, Q=Q):
+        heur = jag_pq_heur(gamma, m, P=P, Q=Q, orient="hor")
+        hi = heur.max_load(gamma)
     integral = np.issubdtype(gamma.dtype, np.integer)
     rprobe = _RowProbe(gamma, P, Q)
-    L = search.bisect_bottleneck(rprobe.feasible_many, lo, hi,
-                                 integral=integral, width=31)
-    best_cuts = search.realize(rprobe.cuts, L, integral=integral)
-    col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, best_cuts),
-                                     [Q] * P)
+    with _trace.span("jag_pq_opt.bisect", P=P, Q=Q):
+        L = search.bisect_bottleneck(rprobe.feasible_many, lo, hi,
+                                     integral=integral, width=31)
+    with _trace.span("jag_pq_opt.realize"):
+        best_cuts = search.realize(rprobe.cuts, L, integral=integral)
+        col_cuts = oned.optimal_1d_batch(_stripe_matrix(gamma, best_cuts),
+                                         [Q] * P)
     return _build(gamma, best_cuts, col_cuts)
 
 
@@ -439,8 +444,10 @@ def jag_m_heur_probe(gamma: np.ndarray, m: int, P: int | None = None,
         gsum = np.add.reduceat(speeds, chunk[:-1])
         row_cuts = oned.optimal_1d(row_prefix(gamma), P, speeds=gsum)
         return jag_m_probe_given_stripes(gamma, m, row_cuts, speeds=speeds)
-    row_cuts = oned.optimal_1d(row_prefix(gamma), P)
-    return jag_m_probe_given_stripes(gamma, m, row_cuts)
+    with _trace.span("jag_m_heur_probe.rows", P=P):
+        row_cuts = oned.optimal_1d(row_prefix(gamma), P)
+    with _trace.span("jag_m_heur_probe.probe_m"):
+        return jag_m_probe_given_stripes(gamma, m, row_cuts)
 
 
 @_with_orientation

@@ -35,6 +35,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.counters import C as _C
+
 from . import search
 
 __all__ = [
@@ -164,6 +166,7 @@ def probe(p: np.ndarray, m: int, L: float,
     simply skipped and its share shifts to later, faster ones — maximal
     extension stays exact for the fixed processor order.
     """
+    _C.scalar_probes += 1
     n = len(p) - 1
     if speeds is not None:
         cuts = np.empty(m + 1, dtype=np.int64)
@@ -204,6 +207,7 @@ def probe_count(p: np.ndarray, L: float, cap: int, start: int = 0,
     zero-speed position is consumed with an empty interval rather than
     declaring the chain stuck.
     """
+    _C.scalar_probes += 1
     n = len(p) - 1
     if speeds is not None:
         b = start

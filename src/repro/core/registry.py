@@ -6,9 +6,14 @@ orientation variant; append '-hor'/'-ver' for the fixed-orientation ones.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable
 
 import numpy as np
+
+from repro.obs import counters as _counters
+from repro.obs import trace as _trace
+from repro.obs.report import PartitionReport
 
 from . import hier, hybrid, jagged, rect, search
 from .types import Partition
@@ -50,18 +55,56 @@ def names() -> list[str]:
 def partition(name: str, gamma: np.ndarray, m: int, *,
               speeds=None, **kw) -> Partition:
     fn = get(name)
+    _counters.C.reset()  # counter state is per-partition-call (see obs)
     sp = search.normalize_speeds(speeds, m) if speeds is not None else None
-    if sp is None:
-        p = fn(gamma, m, **kw)
-    elif name in CAPACITY_AWARE:
-        p = fn(gamma, m, speeds=sp, **kw)
-    else:
-        raise ValueError(
-            f"{name!r} does not support heterogeneous speeds; "
-            f"capacity-aware algorithms: {sorted(CAPACITY_AWARE)}")
+    with _trace.span(f"partition.{name}", m=int(m)):
+        if sp is None:
+            p = fn(gamma, m, **kw)
+        elif name in CAPACITY_AWARE:
+            p = fn(gamma, m, speeds=sp, **kw)
+        else:
+            raise ValueError(
+                f"{name!r} does not support heterogeneous speeds; "
+                f"capacity-aware algorithms: {sorted(CAPACITY_AWARE)}")
     if p.m_target is None:
         p.m_target = m
     return p
+
+
+def explain(name: str, gamma: np.ndarray, m: int, *, speeds=None,
+            **kw) -> PartitionReport:
+    """Partition with tracing on and return the structured explain-plan.
+
+    Runs :func:`partition` under :func:`repro.obs.tracing` and packages
+    the result as a :class:`~repro.obs.report.PartitionReport`: the
+    partition (bit-identical to the plain call — only the probe *timing*
+    is observed, never the verdicts), its bottleneck / ideal / imbalance,
+    the per-phase spans, and the engine counter snapshot.  Composes with
+    an enclosing ``obs.tracing()`` block: the outer recording keeps its
+    events and gains this call's spans.
+
+    ``bottleneck`` / ``ideal`` are raw load values even under
+    heterogeneous ``speeds`` (the relative-load view depends on the
+    consumer's speed semantics; the partition object supports both).
+    """
+    gamma = np.asarray(gamma)
+    nested = _trace.enabled()
+    with _trace.tracing(clear=not nested) as tr:
+        before = len(tr._events)
+        t0 = time.perf_counter()
+        part = partition(name, gamma, m, speeds=speeds, **kw)
+        wall = time.perf_counter() - t0
+        snap = _counters.C.snapshot()
+        spans = tr.events()[before:]
+    bottleneck = float(part.max_load(gamma))
+    total = float(gamma[-1, -1])
+    ideal = total / m if m else 0.0
+    imbalance = bottleneck / ideal - 1.0 if ideal > 0 else 0.0
+    return PartitionReport(
+        algo=name, m=int(m),
+        shape=(gamma.shape[0] - 1, gamma.shape[1] - 1),
+        bottleneck=bottleneck, ideal=ideal, imbalance=imbalance,
+        wall_time=wall, partition=part, spans=spans, counters=snap)
 
 
 _REGISTRY["rect-uniform"] = rect.rect_uniform

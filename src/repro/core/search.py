@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.counters import C as _C
+
 __all__ = [
     "PackedPrefixes", "bisect_bottleneck", "bisect_bottleneck_batch",
     "bisect_bottleneck_multi", "bisect_bottleneck_scalar", "bisect_index",
@@ -130,6 +132,7 @@ class PackedPrefixes:
         a zero-speed step takes an empty interval and moves on instead of
         terminating the chain.
         """
+        _C.probe_calls += 1
         if speeds is not None:
             return self._counts_speeds(Ls, cap, rows, speeds)
         Ls = np.atleast_2d(np.asarray(Ls))
@@ -138,6 +141,9 @@ class PackedPrefixes:
         nmax = self.n if rows is None else self.n[rows]
         S = starts.shape[0]
         K = Ls.shape[-1]
+        _C.probe_chains += S * K
+        if S * K > _C.probe_batch_max:
+            _C.probe_batch_max = S * K
         flat, ends = self.flat, row_ends[:, None]
         fpos = np.broadcast_to(starts[:, None], (S, K)).copy()
         counts = np.zeros((S, K), dtype=np.int64)
@@ -182,6 +188,9 @@ class PackedPrefixes:
         row_ends = self.ends if rows is None else self.ends[rows]
         S = starts.shape[0]
         K = Ls.shape[-1]
+        _C.probe_chains += S * K
+        if S * K > _C.probe_batch_max:
+            _C.probe_batch_max = S * K
         Ls = np.broadcast_to(Ls, (S, K))
         sp = np.asarray(speeds, dtype=np.float64)
         capa = np.asarray(cap)
@@ -223,6 +232,11 @@ class PackedPrefixes:
         """
         Ls = np.asarray(Ls)
         K = Ls.shape[-1]
+        S = self.starts.shape[0]
+        _C.probe_calls += 1
+        _C.probe_chains += S * K
+        if S * K > _C.probe_batch_max:
+            _C.probe_batch_max = S * K
         n = int(self.n[0])
         flat, starts = self.flat, self.starts[:, None]
         pos = np.zeros(K, dtype=np.int64)
@@ -293,6 +307,7 @@ def bisect_bottleneck(feasible, lo, hi, *, integral: bool, width: int = 15,
         hi_i = int(np.floor(hi))
         lowered = False
         while lo_i < hi_i:
+            _C.bisect_rounds += 1
             cand = interior_candidates(lo_i, hi_i, width)
             feas = np.asarray(feasible(cand))
             f = np.flatnonzero(feas)
@@ -305,6 +320,7 @@ def bisect_bottleneck(feasible, lo, hi, *, integral: bool, width: int = 15,
         return hi_i if lowered else hi
     lo, hi = float(lo), float(hi)
     while hi - lo > max(rel_tol * abs(hi), abs_tol):
+        _C.bisect_rounds += 1
         fr = np.arange(1, width + 1, dtype=np.float64) / (width + 1)
         cand = lo + (hi - lo) * fr
         feas = np.asarray(feasible(cand))
@@ -342,6 +358,7 @@ def bisect_bottleneck_batch(feasible, lo, hi, *, integral: bool,
             rows = np.flatnonzero(lob < hib)
             if not rows.size:
                 break
+            _C.bisect_rounds += 1
             la, ha = lob[rows], hib[rows]
             cand = la[:, None] + ((ha - la)[:, None] * j[None, :]) \
                 // (width + 1)
@@ -366,6 +383,7 @@ def bisect_bottleneck_batch(feasible, lo, hi, *, integral: bool,
             hi_f - lo > np.maximum(rel_tol * np.abs(hi_f), abs_tol))
         if not rows.size:
             break
+        _C.bisect_rounds += 1
         la, ha = lo[rows], hi_f[rows]
         cand = la[:, None] + (ha - la)[:, None] * fr[None, :]
         feas = np.asarray(feasible(cand, rows))
@@ -434,6 +452,7 @@ def bisect_bottleneck_scalar(feasible_one, lo, hi, *, integral: bool,
         a, b = int(np.ceil(lo - 1e-9)), int(np.floor(hi))
         lowered = False
         while a < b:
+            _C.bisect_rounds += 1
             mid = (a + b) // 2
             if feasible_one(mid):
                 b = mid
@@ -444,6 +463,7 @@ def bisect_bottleneck_scalar(feasible_one, lo, hi, *, integral: bool,
     lo, hi = float(lo), float(hi)
     lowered = False
     while hi - lo > max(rel_tol * abs(hi), abs_tol):
+        _C.bisect_rounds += 1
         mid = 0.5 * (lo + hi)
         if feasible_one(mid):
             hi = mid
@@ -464,6 +484,7 @@ def realize(realizer, L, *, integral: bool):
     out = realizer(L)
     if out is None and not integral:
         for _ in range(60):
+            _C.realize_bumps += 1
             L = np.nextafter(L, np.inf) + 1e-12 * max(abs(L), 1.0)
             out = realizer(L)
             if out is not None:

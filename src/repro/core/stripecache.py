@@ -36,6 +36,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.counters import C as _C
+
 from . import oned
 from .types import Rect
 
@@ -75,11 +77,15 @@ class StripeView:
     def cost(self, r0: int, r1: int, q: int) -> float:
         """Exact optimal q-way bottleneck of stripe ``[r0, r1)``, memoized."""
         key = (r0, r1, q)
+        _C.stripe_lookups += 1
         v = self._costs.get(key)
         if v is None:
+            _C.stripe_misses += 1
             p = self.prefix_copy(r0, r1)
             v = oned.max_interval_load(p, oned.optimal_1d(p, q))
             self._costs[key] = v
+        else:
+            _C.stripe_hits += 1
         return v
 
 
@@ -195,20 +201,32 @@ class SubgridView:
                 warm: float | None = None) -> tuple[float, np.ndarray]:
         """Memoized ``(cost, cuts)`` of the optimal q-way stripe split."""
         key = self._key(a, b, q)
+        _C.subgrid_lookups += 1
         v = self._costs.get(key)
         if v is None:
+            _C.subgrid_misses += 1
             p = self.stripe_prefix(a, b)
             cuts = oned.optimal_1d(p, q, warm=warm)
             v = (oned.max_interval_load(p, cuts), cuts)
             self._costs[key] = v
+            if len(self._costs) > _C.subgrid_memo_peak:
+                _C.subgrid_memo_peak = len(self._costs)
+        else:
+            _C.subgrid_hits += 1
         return v
 
     def cuts_1d_batch(self, jobs) -> list[tuple[float, np.ndarray]]:
         """Batch form of :meth:`cuts_1d`: ``jobs`` is a list of ``(a, b, q)``
         window stripes; uncached jobs are solved through ONE packed
         multi-chain probe (``oned.optimal_1d_batch``) and memoized."""
+        jobs = list(jobs)
         miss = [j for j in dict.fromkeys(jobs)
                 if self._key(*j) not in self._costs]
+        # each job is one lookup; a duplicate of an uncached job counts as
+        # a hit — it reads the entry its twin just filled
+        _C.subgrid_lookups += len(jobs)
+        _C.subgrid_misses += len(miss)
+        _C.subgrid_hits += len(jobs) - len(miss)
         if miss:
             ps = [self.stripe_prefix(a, b) for a, b, _ in miss]
             for (a, b, q), p, cuts in zip(
@@ -216,6 +234,8 @@ class SubgridView:
                                                          in miss])):
                 self._costs[self._key(a, b, q)] = \
                     (oned.max_interval_load(p, cuts), cuts)
+            if len(self._costs) > _C.subgrid_memo_peak:
+                _C.subgrid_memo_peak = len(self._costs)
         return [self._costs[self._key(*j)] for j in jobs]
 
     # -- hier-style full-length prefixes (parent coordinates) ---------------

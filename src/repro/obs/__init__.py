@@ -1,0 +1,37 @@
+"""Zero-dependency observability: span tracer, engine counters, reports.
+
+Three pieces, all stdlib-only (importable from numpy-only contexts, no
+circular dependency on the engine):
+
+- :mod:`repro.obs.trace` — a span tracer with a no-op fast path when
+  disabled, Chrome/Perfetto ``trace_event`` JSON export, and an opt-in
+  ``jax.profiler`` trace-annotation bridge;
+- :mod:`repro.obs.counters` — the engine counter singleton (:data:`C`)
+  the hot paths bump unconditionally;
+- :mod:`repro.obs.report` — :class:`PartitionReport`, the structured
+  explain-plan object ``registry.explain`` returns.
+
+Typical use::
+
+    from repro import obs
+    from repro.core import registry
+
+    report = registry.explain("jag-pq-opt", gamma, 1000, P=25, Q=40)
+    print(report.summary())
+
+    with obs.tracing() as tracer:
+        ...  # any instrumented work
+    tracer.write("trace.json")  # open in ui.perfetto.dev
+"""
+from __future__ import annotations
+
+from . import counters, report, trace
+from .counters import C, Counters
+from .report import PartitionReport
+from .trace import (TRACER, Tracer, chrome_trace, enabled, instant, span,
+                    tracing, validate_chrome_trace, write_chrome_trace)
+
+__all__ = ["C", "Counters", "PartitionReport", "TRACER", "Tracer",
+           "chrome_trace", "counters", "enabled", "instant", "report",
+           "span", "trace", "tracing", "validate_chrome_trace",
+           "write_chrome_trace"]

@@ -1,0 +1,70 @@
+"""Engine counters: one module-level singleton, plain-int increments.
+
+The hot paths (``core.search``, ``core.stripecache``, ``core.oned``) bump
+attributes on :data:`C` unconditionally — a Python attribute ``+= 1`` costs
+tens of nanoseconds, which is invisible next to the numpy calls it counts
+(the dedicated overhead bench ``benchmarks/bench_obs.py`` gates the whole
+instrumented stack, counters included, at <3% on ``jag-pq-opt.m1000``).
+There is deliberately no enable flag and no function-call indirection on
+the increment path: a branch would cost as much as the add.
+
+Counter state is *per-partition-call*: ``registry.partition`` resets
+:data:`C` on entry, and ``registry.explain`` snapshots it on exit, so a
+snapshot always describes exactly one partitioning run.  Long-running
+consumers (the rebalance runtime, the serve batcher) that want cumulative
+counts must snapshot around the region they care about.
+"""
+from __future__ import annotations
+
+__all__ = ["Counters", "C"]
+
+_FIELDS = (
+    # wide-bisection engine (core.search)
+    "bisect_rounds",      # candidate rounds across all bisection drivers
+    "probe_calls",        # PackedPrefixes.counts/_counts_speeds/joint_counts
+    "probe_chains",       # total (row, candidate-L) chains advanced
+    "probe_batch_max",    # widest single packed probe batch (S * K)
+    "realize_bumps",      # ulp nudges realize() needed for float bottlenecks
+    # scalar 1D probes (core.oned)
+    "scalar_probes",      # oned.probe / oned.probe_count invocations
+    # stripe memo (core.stripecache.StripeView.cost)
+    "stripe_lookups",
+    "stripe_hits",
+    "stripe_misses",
+    # subgrid memo (core.stripecache.SubgridView.cuts_1d[_batch])
+    "subgrid_lookups",
+    "subgrid_hits",
+    "subgrid_misses",
+    "subgrid_memo_peak",  # high-water mark of the shared memo's size
+    # serving (serve.batcher)
+    "serve_plans",
+    "serve_replans",
+    "serve_queue_peak",   # deepest request queue seen by plan()/replan()
+)
+
+
+class Counters:
+    """All engine counters as plain int attributes (see module docstring)."""
+
+    __slots__ = _FIELDS
+
+    FIELDS = _FIELDS
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        for f in _FIELDS:
+            setattr(self, f, 0)
+
+    def snapshot(self) -> dict[str, int]:
+        """Copy of every counter as a plain dict (JSON-ready)."""
+        return {f: getattr(self, f) for f in _FIELDS}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        nz = {f: v for f, v in self.snapshot().items() if v}
+        return f"Counters({nz})"
+
+
+#: The singleton every instrumented module imports and bumps directly.
+C = Counters()

@@ -54,10 +54,17 @@ def migration_matrix(old: Plan, new: Plan, weights=None) -> np.ndarray:
     return flow
 
 
-def per_processor_churn(old: Plan, new: Plan, weights=None) -> dict:
+def per_processor_churn(old: Plan | None = None, new: Plan | None = None,
+                        weights=None, *, flow: np.ndarray | None = None
+                        ) -> dict:
     """Per-processor outflow/inflow (and their max — the migration
-    straggler, since migration finishes when the busiest link drains)."""
-    flow = migration_matrix(old, new, weights)
+    straggler, since migration finishes when the busiest link drains).
+
+    Pass a precomputed ``flow`` (from :func:`migration_matrix`) to avoid
+    recomputing the owner-map diff when the caller already holds it.
+    """
+    if flow is None:
+        flow = migration_matrix(old, new, weights)
     out = flow.sum(axis=1)
     inn = flow.sum(axis=0)
     return {"outflow": out, "inflow": inn,

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -43,11 +44,12 @@ import numpy as np
 
 from repro.core import device
 from repro.kernels.sat import ops as sat_ops
+from repro.obs import trace as _trace
 from repro.rebalance.policy import replan_mode
 
 __all__ = ["ingest_stage", "sat_stage", "partition_stage", "plan_frames",
            "plan_stream", "iter_plan_slices", "plan_iter", "plan_host",
-           "resolve_mesh", "replan_mode"]
+           "profile_stages", "resolve_mesh", "replan_mode"]
 
 # How many slices the lazy iterator aims for when none is requested: deep
 # enough that the policy loop starts after ~1/4 of the stream is planned,
@@ -285,10 +287,13 @@ def iter_plan_slices(frames, *, P: int, m: int, mesh=None,
     for i, t0 in enumerate(range(0, T, slice_size)):
         t1 = min(t0 + slice_size, T)
         _check_finite(frames[t0:t1], t0, t1, what=f"planner slice {i}")
-        pending.append((t0, t1, plan_stream(
-            frames[t0:t1], P=P, m=m, mesh=mesh, k=k, rounds=rounds,
-            gamma_dtype=gamma_dtype, use_pallas=use_pallas,
-            interpret=interpret, exact=exact)))
+        # host-side span: measures the *dispatch* only (jax dispatch is
+        # async), so instrumentation never serializes the slice overlap
+        with _trace.span("planner.dispatch", slice=i, t0=t0, t1=t1):
+            pending.append((t0, t1, plan_stream(
+                frames[t0:t1], P=P, m=m, mesh=mesh, k=k, rounds=rounds,
+                gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+                interpret=interpret, exact=exact)))
     yield from pending
 
 
@@ -303,11 +308,15 @@ def plan_iter(frames, *, P: int, m: int, mesh=None,
     """
     from repro.rebalance import batch_device
     shape = tuple(frames.shape[1:])
-    for _, _, batched in iter_plan_slices(
+    for t0, t1, batched in iter_plan_slices(
             frames, P=P, m=m, mesh=mesh, slice_size=slice_size, k=k,
             rounds=rounds, gamma_dtype=gamma_dtype, use_pallas=use_pallas,
             interpret=interpret, exact=exact):
-        yield from batch_device.unstack_plans(batched, shape)
+        # collect blocks on the slice's device results (the first host
+        # read) — its span width is the wait the policy loop actually saw
+        with _trace.span("planner.collect", t0=t0, t1=t1):
+            plans = batch_device.unstack_plans(batched, shape)
+        yield from plans
 
 
 def plan_host(frames, *, P: int, m: int, mesh=None, k: int = 8,
@@ -320,3 +329,54 @@ def plan_host(frames, *, P: int, m: int, mesh=None, k: int = 8,
                           gamma_dtype=gamma_dtype, use_pallas=use_pallas,
                           interpret=interpret, exact=exact)
     return batch_device.unstack_plans(batched, tuple(frames.shape[1:]))
+
+
+def profile_stages(frames, *, P: int, m: int, k: int = 8, rounds: int = 8,
+                   gamma_dtype=None, use_pallas: bool = False,
+                   interpret: bool = True, exact: bool = False, mesh=None
+                   ) -> tuple[list, dict[str, float]]:
+    """Blocking per-stage timing of the planning chain (opt-in profiler).
+
+    The production paths keep ingest -> SAT -> partition under one jit
+    boundary with async dispatch; this helper deliberately *breaks* that
+    fusion — jitting each stage separately and ``block_until_ready``-ing
+    its output — to attribute wall time to the named stages.  Returns
+    ``(plans, timings)``: the same per-frame Plans as :func:`plan_host`
+    (cuts are bit-identical — stage boundaries don't change any math)
+    and a ``{"ingest", "sat", "partition", "collect"} -> seconds`` dict.
+    Numbers are for attribution only; the fused path beats their sum.
+    On a mesh the sharded chain cannot be split, so the whole sharded
+    ``plan_stream`` is charged to ``partition``.
+    """
+    from repro.rebalance import batch_device
+    frames = jnp.asarray(frames)
+    _check_finite(frames, 0, frames.shape[0], what="profile_stages")
+    shape = tuple(frames.shape[1:])
+    timings: dict[str, float] = {}
+
+    def timed(name, fn, *a):
+        t0 = time.perf_counter()
+        with _trace.span(f"planner.stage.{name}"):
+            out = jax.block_until_ready(fn(*a))
+        timings[name] = time.perf_counter() - t0
+        return out
+
+    if mesh is not None:
+        out = timed("partition", functools.partial(
+            plan_stream, P=P, m=m, mesh=mesh, k=k, rounds=rounds,
+            gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+            interpret=interpret, exact=exact), frames)
+    else:
+        gd = resolve_gamma_dtype(gamma_dtype, exact=exact)
+        ing = timed("ingest", jax.jit(functools.partial(
+            ingest_stage, gamma_dtype=gd)), frames)
+        g = timed("sat", jax.jit(functools.partial(
+            sat_stage, use_pallas=use_pallas, interpret=interpret)), ing)
+        out = timed("partition", jax.jit(functools.partial(
+            partition_stage, P=P, m=m, k=k, rounds=rounds, gamma_dtype=gd,
+            exact=exact, use_pallas=use_pallas, interpret=interpret)), g)
+    t0 = time.perf_counter()
+    with _trace.span("planner.stage.collect"):
+        plans = batch_device.unstack_plans(out, shape)
+    timings["collect"] = time.perf_counter() - t0
+    return plans, timings

@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import trace as _trace
+
 __all__ = ["StepState", "NeverRebalance", "AlwaysRebalance", "EveryK",
            "HysteresisPolicy", "TwoPhaseHysteresis",
            "FaultAwareHysteresis", "replan_mode"]
@@ -38,8 +40,13 @@ def replan_mode(policy, state: "StepState") -> str:
     candidate whenever it triggers and never escalates.
     """
     if hasattr(policy, "mode"):
-        return policy.mode(state)
-    return "fast" if policy.decide(state) else "keep"
+        mode = policy.mode(state)
+    else:
+        mode = "fast" if policy.decide(state) else "keep"
+    if _trace.TRACER.enabled:
+        _trace.instant("policy.replan_mode", step=state.step, mode=mode,
+                       excess=round(state.excess, 3))
+    return mode
 
 
 @dataclasses.dataclass(frozen=True)

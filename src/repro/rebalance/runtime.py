@@ -20,11 +20,13 @@ candidate plans, which is how the never/always/hysteresis trade-off
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import prefix, search
+from repro.obs import trace as _trace
 
 from . import batch_device, migrate, planner
 from .policy import StepState, replan_mode
@@ -43,6 +45,9 @@ class StepRecord:
     migration_cost: float    # alpha * (volume + evacuation) + overhead
     evacuation_volume: float = 0.0  # weight pulled off dead parts this step
     forced: bool = False     # a failure forced this replan (policy bypassed)
+    mode: str = "keep"       # replan grade: "init" | "keep" | "fast" | "slow"
+    wall_time: float = 0.0   # measured host seconds spent on this step
+    churn: dict | None = None  # per_processor_churn of the adopted replan
 
 
 @dataclasses.dataclass
@@ -86,6 +91,39 @@ class RunResult:
                 f"migrate={self.migration_cost:.3g}) "
                 f"replans={self.n_replans} "
                 f"LI_mean={self.mean_imbalance * 100:.2f}%")
+
+    def trace_events(self, *, pid: int = 0, scale: float = 1.0) -> list[dict]:
+        """Chrome ``trace_event`` view of the run ledger.
+
+        Two timelines per record: tid 0 is the *virtual* compute timeline
+        (each step an "X" slice whose duration is ``max_load * scale`` us
+        — slice widths show the bottleneck the paper's cost model
+        charges), tid 1 carries the measured host wall-time of the same
+        step.  Replans add instant markers with their grade, volume and
+        cost (plus evacuation when forced).  Feed the result to
+        :func:`repro.obs.chrome_trace` / ``write_chrome_trace``.
+        """
+        ev: list[dict] = []
+        ts_v = ts_w = 0.0
+        for r in self.records:
+            dur_v = float(r.max_load) * scale
+            ev.append({"name": f"step[{r.step}]", "ph": "X", "pid": pid,
+                       "tid": 0, "ts": ts_v, "dur": dur_v,
+                       "args": {"ideal": r.ideal, "mode": r.mode}})
+            if r.replanned:
+                iargs = {"mode": r.mode, "volume": r.migration_volume,
+                         "cost": r.migration_cost}
+                if r.forced:
+                    iargs["forced"] = True
+                    iargs["evacuation"] = r.evacuation_volume
+                ev.append({"name": "replan", "ph": "i", "s": "t",
+                           "pid": pid, "tid": 0, "ts": ts_v, "args": iargs})
+            ev.append({"name": f"host.step[{r.step}]", "ph": "X",
+                       "pid": pid, "tid": 1, "ts": ts_w,
+                       "dur": r.wall_time * 1e6})
+            ts_v += dur_v
+            ts_w += r.wall_time * 1e6
+        return ev
 
 
 def plan_stream_host(frames: np.ndarray, *, P: int, m: int, k: int = 8,
@@ -185,64 +223,74 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
         return sp, denom, faults.events_at(t)
 
     records: list[StepRecord] = []
-    active = next_plan(0)
-    g0 = frame_gamma(0)
-    sp, denom, _ = speeds_state(0)
-    if sp is not None:
-        active = faults_mod.capacity_plan(g0, P=P, m=m, speeds=sp,
-                                          optimal=True)
-    if validate:
-        active.validate(g0, m=m)
-    achieved = _rel_max(active, g0, sp)
+    t_wall = time.perf_counter()
+    with _trace.span("runtime.step", t=0):
+        active = next_plan(0)
+        g0 = frame_gamma(0)
+        sp, denom, _ = speeds_state(0)
+        if sp is not None:
+            active = faults_mod.capacity_plan(g0, P=P, m=m, speeds=sp,
+                                              optimal=True)
+        if validate:
+            active.validate(g0, m=m)
+        achieved = _rel_max(active, g0, sp)
     total_at_replan = float(g0[-1, -1])
     steps_since = 0
     last_volume = 0.0
     records.append(StepRecord(0, achieved, total_at_replan / denom, True,
-                              0.0, 0.0))
+                              0.0, 0.0, mode="init",
+                              wall_time=time.perf_counter() - t_wall))
     for t in range(1, len(frames)):
-        candidate = next_plan(t)
-        g = frame_gamma(t)
-        total = float(g[-1, -1])
-        sp, denom, events = speeds_state(t)
-        cur_ml = _rel_max(active, g, sp)
-        steps_since += 1
-        ideal = total / denom
-        state = StepState(step=t, max_load=cur_ml, ideal=ideal,
-                          total_load=total, achieved_at_replan=achieved,
-                          total_at_replan=total_at_replan,
-                          steps_since_replan=steps_since,
-                          last_migration_volume=last_volume, alpha=alpha,
-                          replan_overhead=replan_overhead,
-                          capacity_changed=bool(events))
-        forced = any(e.kind == "fail" for e in events)
-        mode = "slow" if forced else replan_mode(policy, state)
-        if forced or mode != "keep":
-            if sp is not None:
-                candidate = faults_mod.capacity_plan(
-                    g, P=P, m=m, speeds=sp,
-                    optimal=forced or mode == "slow")
-            w = frames[t] if weight == "load" else None
-            vol = migrate.migration_volume(active, candidate, weights=w)
-            evac = 0.0
-            if faults is not None:
-                dead = faults.failed_at(t)
-                if dead.size:
-                    flow = migrate.migration_matrix(active, candidate,
-                                                    weights=w)
-                    evac = float(flow[dead, :].sum())
-            cost = replan_overhead + alpha * (vol + evac)
-            active = candidate
-            if validate:
-                active.validate(g, m=m)
-            achieved = _rel_max(active, g, sp)
-            total_at_replan = total
-            steps_since = 0
-            last_volume = vol
-            records.append(StepRecord(t, achieved, ideal, True, vol,
-                                      cost, evac, forced))
-        else:
-            records.append(StepRecord(t, cur_ml, ideal, False, 0.0,
-                                      0.0))
+        t_wall = time.perf_counter()
+        with _trace.span("runtime.step", t=t) as _sp:
+            candidate = next_plan(t)
+            g = frame_gamma(t)
+            total = float(g[-1, -1])
+            sp, denom, events = speeds_state(t)
+            cur_ml = _rel_max(active, g, sp)
+            steps_since += 1
+            ideal = total / denom
+            state = StepState(step=t, max_load=cur_ml, ideal=ideal,
+                              total_load=total, achieved_at_replan=achieved,
+                              total_at_replan=total_at_replan,
+                              steps_since_replan=steps_since,
+                              last_migration_volume=last_volume, alpha=alpha,
+                              replan_overhead=replan_overhead,
+                              capacity_changed=bool(events))
+            forced = any(e.kind == "fail" for e in events)
+            mode = "slow" if forced else replan_mode(policy, state)
+            _sp.args["mode"] = mode
+            if forced or mode != "keep":
+                if sp is not None:
+                    candidate = faults_mod.capacity_plan(
+                        g, P=P, m=m, speeds=sp,
+                        optimal=forced or mode == "slow")
+                w = frames[t] if weight == "load" else None
+                flow = migrate.migration_matrix(active, candidate,
+                                                weights=w)
+                vol = float(flow.sum())
+                evac = 0.0
+                if faults is not None:
+                    dead = faults.failed_at(t)
+                    if dead.size:
+                        evac = float(flow[dead, :].sum())
+                churn = migrate.per_processor_churn(flow=flow)
+                cost = replan_overhead + alpha * (vol + evac)
+                active = candidate
+                if validate:
+                    active.validate(g, m=m)
+                achieved = _rel_max(active, g, sp)
+                total_at_replan = total
+                steps_since = 0
+                last_volume = vol
+                records.append(StepRecord(
+                    t, achieved, ideal, True, vol, cost, evac, forced,
+                    mode=mode, wall_time=time.perf_counter() - t_wall,
+                    churn=churn))
+            else:
+                records.append(StepRecord(
+                    t, cur_ml, ideal, False, 0.0, 0.0, mode="keep",
+                    wall_time=time.perf_counter() - t_wall))
     return RunResult(records, active)
 
 

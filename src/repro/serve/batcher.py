@@ -17,6 +17,8 @@ import dataclasses
 import numpy as np
 
 from repro.core import oned, search
+from repro.obs import trace as _trace
+from repro.obs.counters import C as _C
 
 
 @dataclasses.dataclass
@@ -61,25 +63,30 @@ def plan(requests: list[Request], n_replicas: int, *,
     capacity-proportional ranges, and dead (``speed=0``) replicas
     receive no requests.  ``rb`` has no capacity-aware form and raises.
     """
-    sp = search.normalize_speeds(speeds, n_replicas)
-    reqs = sorted(requests, key=lambda r: r.prompt_tokens, reverse=True) \
-        if sort else list(requests)
-    loads = np.array([r.prompt_tokens for r in reqs], dtype=np.int64)
-    p = np.concatenate([[0], np.cumsum(loads)])
-    if algo == "direct":
-        cuts = oned.direct_cut(p, n_replicas) if sp is None \
-            else _direct_cut_speeds(p, sp)
-    elif algo == "rb":
-        if sp is not None:
-            raise ValueError("algo='rb' has no capacity-aware form; use "
-                             "'optimal' or 'direct' with speeds")
-        cuts = oned.recursive_bisection(p, n_replicas)
-    else:
-        cuts = oned.optimal_1d(p, n_replicas, warm=warm, speeds=sp)
-    out = []
-    for i in range(n_replicas):
-        out.append(Assignment(i, reqs[int(cuts[i]):int(cuts[i + 1])]))
-    return out
+    _C.serve_plans += 1
+    if len(requests) > _C.serve_queue_peak:
+        _C.serve_queue_peak = len(requests)
+    with _trace.span("serve.plan", algo=algo, queue_depth=len(requests),
+                     replicas=n_replicas):
+        sp = search.normalize_speeds(speeds, n_replicas)
+        reqs = sorted(requests, key=lambda r: r.prompt_tokens,
+                      reverse=True) if sort else list(requests)
+        loads = np.array([r.prompt_tokens for r in reqs], dtype=np.int64)
+        p = np.concatenate([[0], np.cumsum(loads)])
+        if algo == "direct":
+            cuts = oned.direct_cut(p, n_replicas) if sp is None \
+                else _direct_cut_speeds(p, sp)
+        elif algo == "rb":
+            if sp is not None:
+                raise ValueError("algo='rb' has no capacity-aware form; "
+                                 "use 'optimal' or 'direct' with speeds")
+            cuts = oned.recursive_bisection(p, n_replicas)
+        else:
+            cuts = oned.optimal_1d(p, n_replicas, warm=warm, speeds=sp)
+        out = []
+        for i in range(n_replicas):
+            out.append(Assignment(i, reqs[int(cuts[i]):int(cuts[i + 1])]))
+        return out
 
 
 def _greedy_extend(assignments: list[Assignment],
@@ -131,37 +138,58 @@ def replan(assignments: list[Assignment], new_requests: list[Request], *,
                          "(the replica count comes from the prior plan)")
     reqs = [r for a in assignments for r in a.requests] + list(new_requests)
     warm = max(a.load for a in assignments)
-    if policy is None:
-        return plan(reqs, len(assignments), algo=algo, sort=sort,
-                    warm=float(warm) if warm > 0 else None), \
-            "slow" if algo == "optimal" else "fast"
+    _C.serve_replans += 1
+    if len(reqs) > _C.serve_queue_peak:
+        _C.serve_queue_peak = len(reqs)
+    with _trace.span("serve.replan", queue_depth=len(reqs),
+                     arrivals=len(new_requests),
+                     replicas=len(assignments)) as sp_:
+        if policy is None:
+            mode = "slow" if algo == "optimal" else "fast"
+            sp_.args["mode"] = mode
+            return plan(reqs, len(assignments), algo=algo, sort=sort,
+                        warm=float(warm) if warm > 0 else None), mode
 
-    from repro.rebalance.policy import StepState, replan_mode
-    R = len(assignments)
-    total = float(sum(r.prompt_tokens for r in reqs))
-    ext = _greedy_extend(assignments, new_requests)
-    ext_load = float(max(a.load for a in ext))
-    fast = plan(reqs, R, algo="direct", sort=sort)
-    fast_load = float(max(a.load for a in fast))
-    state = StepState(step=steps_since_replan, max_load=ext_load,
-                      ideal=total / R, total_load=total,
-                      achieved_at_replan=fast_load, total_at_replan=total,
-                      steps_since_replan=steps_since_replan,
-                      last_migration_volume=last_migration_volume,
-                      alpha=alpha, replan_overhead=replan_overhead)
-    mode = replan_mode(policy, state)
-    if mode == "keep":
-        return ext, mode
-    if mode == "slow":
-        warm = fast_load if algo == "optimal" and fast_load > 0 else None
-        return plan(reqs, R, algo=algo, sort=sort, warm=warm), mode
-    return fast, mode
+        from repro.rebalance.policy import StepState, replan_mode
+        R = len(assignments)
+        total = float(sum(r.prompt_tokens for r in reqs))
+        ext = _greedy_extend(assignments, new_requests)
+        ext_load = float(max(a.load for a in ext))
+        fast = plan(reqs, R, algo="direct", sort=sort)
+        fast_load = float(max(a.load for a in fast))
+        state = StepState(step=steps_since_replan, max_load=ext_load,
+                          ideal=total / R, total_load=total,
+                          achieved_at_replan=fast_load, total_at_replan=total,
+                          steps_since_replan=steps_since_replan,
+                          last_migration_volume=last_migration_volume,
+                          alpha=alpha, replan_overhead=replan_overhead)
+        mode = replan_mode(policy, state)
+        sp_.args["mode"] = mode
+        if mode == "keep":
+            return ext, mode
+        if mode == "slow":
+            warm = fast_load if algo == "optimal" and fast_load > 0 else None
+            return plan(reqs, R, algo=algo, sort=sort, warm=warm), mode
+        return fast, mode
 
 
 def imbalance(assignments: list[Assignment]) -> float:
     loads = [a.load for a in assignments]
     avg = sum(loads) / max(len(loads), 1)
     return max(loads) / avg - 1.0 if avg > 0 else 0.0
+
+
+def replica_loads(assignments: list[Assignment]) -> np.ndarray:
+    """Per-replica token loads as an array (the serving load vector)."""
+    return np.array([a.load for a in assignments], dtype=np.int64)
+
+
+def load_histogram(assignments: list[Assignment], bins: int = 10
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """``np.histogram`` of per-replica loads — the skew view a dashboard
+    wants: a balanced plan is one tall bucket, a straggler a far-right
+    outlier.  Returns ``(counts, bin_edges)``."""
+    return np.histogram(replica_loads(assignments), bins=bins)
 
 
 def straggler_rebalance(assignments: list[Assignment],

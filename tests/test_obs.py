@@ -1,0 +1,392 @@
+"""Observability layer: tracer, counters, explain(), ledger, profiling.
+
+Covers the tentpole invariants: explain() is bit-identical to the plain
+partition call; counters are per-call and internally consistent
+(hits + misses == lookups); the tracer composes with enclosing tracing
+blocks and always restores global state; emitted traces validate against
+the Chrome trace_event structure end-to-end (including the demo script's
+file on disk).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import prefix, registry
+from repro.obs.counters import C
+from repro.rebalance import migrate, planner, runtime, stream
+from repro.rebalance import faults as faults_mod
+from repro.rebalance.policy import AlwaysRebalance, HysteresisPolicy
+from repro.serve import batcher
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: fixed-seed shim (tests/_hyp.py)
+    from _hyp import given, settings, strategies as st
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def small_gamma(n=48, seed=0):
+    return prefix.prefix_sum_2d(prefix.uniform_instance(n, n, delta=1.3,
+                                                        seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# tracer
+
+
+def test_tracing_disabled_by_default_and_noop():
+    assert not obs.enabled()
+    sp = obs.span("anything", x=1)
+    with sp as s:
+        s.args["later"] = 2  # the no-op span must absorb arg writes
+    assert obs.TRACER.events() == []
+
+
+def test_tracing_records_and_restores():
+    with obs.tracing() as tr:
+        assert obs.enabled()
+        with obs.span("work", k=3):
+            pass
+        obs.instant("marker", v=1)
+        ev = tr.events()
+    assert not obs.enabled()
+    names = [e["name"] for e in ev]
+    assert names == ["work", "marker"]
+    x = next(e for e in ev if e["name"] == "work")
+    assert x["ph"] == "X" and x["dur"] >= 0 and x["args"] == {"k": 3}
+    i = next(e for e in ev if e["name"] == "marker")
+    assert i["ph"] == "i"
+
+
+def test_tracing_nested_blocks_compose():
+    with obs.tracing() as outer:
+        obs.instant("outer")
+        with obs.tracing(clear=False):
+            obs.instant("inner")
+        # inner block must not have cleared the outer's events
+        names = [e["name"] for e in outer.events()]
+    assert names == ["outer", "inner"]
+    assert not obs.enabled()
+
+
+def test_tracing_restores_on_exception():
+    with pytest.raises(RuntimeError):
+        with obs.tracing():
+            raise RuntimeError("boom")
+    assert not obs.enabled()
+
+
+def test_chrome_trace_structure_and_validation():
+    with obs.tracing() as tr:
+        with obs.span("a", n=1):
+            obs.instant("b")
+        ev = tr.events()
+    doc = obs.chrome_trace(ev, source="test")
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    assert doc["otherData"]["source"] == "test"
+    assert obs.validate_chrome_trace(doc) == ev
+    assert obs.validate_chrome_trace(ev) == ev  # bare array form is legal
+
+
+@pytest.mark.parametrize("bad", [
+    [{"ph": "X", "pid": 0, "tid": 0, "ts": 0, "dur": 1}],   # no name
+    [{"name": "x", "ph": "Z", "pid": 0, "tid": 0, "ts": 0}],  # bad phase
+    [{"name": "x", "ph": "X", "tid": 0, "ts": 0, "dur": 1}],  # no pid
+    [{"name": "x", "ph": "X", "pid": 0, "tid": 0, "ts": 0}],  # X needs dur
+    [{"name": "x", "ph": "i", "pid": 0, "tid": 0}],           # i needs ts
+    ["not an event"],
+])
+def test_validate_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace(bad)
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    path = tmp_path / "t.json"
+    with obs.tracing() as tr:
+        obs.instant("m", count=np.int64(3))  # numpy scalars must coerce
+        ev = tr.events()
+    obs.write_chrome_trace(str(path), ev, note="demo")
+    doc = json.loads(path.read_text())
+    obs.validate_chrome_trace(doc)
+    assert doc["otherData"]["note"] == "demo"
+
+
+# ---------------------------------------------------------------------------
+# explain(): bit-identity + counters
+
+
+EXPLAIN_CASES = [("jag-pq-opt", 16, {}), ("jag-m-heur-probe", 20, {}),
+                 ("hybrid_auto", 24, {})]
+
+
+@pytest.mark.parametrize("name,m,kw", EXPLAIN_CASES)
+def test_explain_bit_identical_to_partition(name, m, kw):
+    g = small_gamma()
+    plain = registry.partition(name, g, m, **kw)
+    rep = registry.explain(name, g, m, **kw)
+    assert rep.bottleneck == float(plain.max_load(g))
+    assert [(r.r0, r.r1, r.c0, r.c1) for r in rep.partition.rects] == \
+        [(r.r0, r.r1, r.c0, r.c1) for r in plain.rects]
+    assert rep.algo == name and rep.m == m
+    assert rep.spans, "explain() must carry per-phase spans"
+    assert rep.counters["probe_calls"] > 0
+    assert rep.wall_time > 0
+    totals = rep.span_totals()
+    assert f"partition.{name}" in totals
+
+
+@pytest.mark.parametrize("name,m,kw", EXPLAIN_CASES)
+def test_counter_consistency_hits_plus_misses(name, m, kw):
+    rep = registry.explain(name, small_gamma(), m, **kw)
+    c = rep.counters
+    assert c["stripe_hits"] + c["stripe_misses"] == c["stripe_lookups"]
+    assert c["subgrid_hits"] + c["subgrid_misses"] == c["subgrid_lookups"]
+
+
+def test_counters_reset_between_registry_calls():
+    g = small_gamma()
+    snap1 = registry.explain("jag-pq-opt", g, 16).counters
+    registry.partition("hybrid_auto", g, 24)  # pollute
+    snap2 = registry.explain("jag-pq-opt", g, 16).counters
+    assert snap1 == snap2
+
+
+def test_subgrid_memo_peak_bounded():
+    rep = registry.explain("hybrid_auto", small_gamma(), 24)
+    c = rep.counters
+    # the memo only grows on misses, so its peak can never exceed them
+    assert 0 < c["subgrid_memo_peak"] <= c["subgrid_misses"]
+
+
+def test_explain_composes_with_enclosing_tracing():
+    g = small_gamma()
+    with obs.tracing() as tr:
+        obs.instant("before")
+        rep = registry.explain("jag-pq-opt", g, 16)
+        names = [e["name"] for e in tr.events()]
+    assert "before" in names          # outer events survived explain()
+    assert "partition.jag-pq-opt" in names
+    assert rep.spans
+    assert not obs.enabled()
+
+
+def test_report_to_dict_and_summary():
+    rep = registry.explain("jag-pq-opt", small_gamma(), 16)
+    d = rep.to_dict()
+    assert d["algo"] == "jag-pq-opt" and d["bottleneck"] == rep.bottleneck
+    assert json.dumps(d)  # must be JSON-serializable
+    assert "Lmax" in rep.summary()
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=8, max_value=40),
+       st.integers(min_value=2, max_value=12))
+def test_counter_consistency_property(n, m):
+    g = prefix.prefix_sum_2d(prefix.uniform_instance(n, n, delta=1.4,
+                                                     seed=n * 31 + m))
+    c = registry.explain("jag-m-heur-probe", g, m).counters
+    assert c["stripe_hits"] + c["stripe_misses"] == c["stripe_lookups"]
+    assert c["subgrid_hits"] + c["subgrid_misses"] == c["subgrid_lookups"]
+    assert all(v >= 0 for v in c.values())
+
+
+# ---------------------------------------------------------------------------
+# runtime ledger
+
+
+def test_runtime_ledger_modes_walltime_churn():
+    frames = stream.drifting_hotspot(T=8, n1=24, n2=24, seed=0)
+    res = runtime.run_stream(frames, HysteresisPolicy(), P=4, m=8,
+                             alpha=0.1, replan_overhead=5.0)
+    assert res.records[0].mode == "init"
+    assert all(r.wall_time > 0 for r in res.records)
+    saw_replan = False
+    for r in res.records[1:]:
+        if r.replanned:
+            saw_replan = True
+            assert r.mode in ("fast", "slow")
+            assert r.churn is not None
+            assert r.churn["volume"] == pytest.approx(r.migration_volume)
+            assert r.churn["outflow"].sum() == \
+                pytest.approx(r.churn["inflow"].sum())
+        else:
+            assert r.mode == "keep" and r.churn is None
+    assert saw_replan
+
+
+def test_runtime_forced_evacuation_churn():
+    frames = stream.drifting_hotspot(T=8, n1=24, n2=24, seed=0)
+    fs = faults_mod.FaultSchedule(8, [faults_mod.FaultEvent(3, 2, "fail")])
+    res = runtime.run_stream(frames, HysteresisPolicy(), P=4, m=8,
+                             alpha=0.1, faults=fs)
+    forced = [r for r in res.records if r.forced]
+    assert forced
+    for r in forced:
+        assert r.mode == "slow" and r.churn is not None
+        # everything leaving the dead processor is the evacuation
+        assert r.churn["outflow"][2] == pytest.approx(r.evacuation_volume)
+
+
+def test_runresult_trace_events_validate():
+    frames = stream.drifting_hotspot(T=6, n1=24, n2=24, seed=1)
+    res = runtime.run_stream(frames, AlwaysRebalance(), P=4, m=8)
+    ev = res.trace_events(pid=2)
+    obs.validate_chrome_trace(obs.chrome_trace(ev))
+    assert all(e["pid"] == 2 for e in ev)
+    replans = [e for e in ev if e["name"] == "replan"]
+    assert len(replans) == sum(r.replanned for r in res.records)
+
+
+def test_per_processor_churn_flow_kwarg():
+    frames = stream.drifting_hotspot(T=2, n1=24, n2=24, seed=0)
+    plans = planner.plan_host(frames, P=4, m=8)
+    flow = migrate.migration_matrix(plans[0], plans[1], weights=frames[1])
+    via_flow = migrate.per_processor_churn(flow=flow)
+    direct = migrate.per_processor_churn(plans[0], plans[1],
+                                         weights=frames[1])
+    np.testing.assert_allclose(via_flow["outflow"], direct["outflow"])
+    assert via_flow["volume"] == pytest.approx(direct["volume"])
+    assert via_flow["volume"] == pytest.approx(float(flow.sum()))
+
+
+# ---------------------------------------------------------------------------
+# planner + policy + serve instrumentation
+
+
+def test_planner_profile_stages_matches_plan_host():
+    frames = stream.drifting_hotspot(T=4, n1=24, n2=24, seed=0)
+    ref = planner.plan_host(frames, P=4, m=8)
+    plans, timings = planner.profile_stages(frames, P=4, m=8)
+    assert set(timings) == {"ingest", "sat", "partition", "collect"}
+    assert all(v >= 0 for v in timings.values())
+    assert len(plans) == len(ref)
+    for a, b in zip(ref, plans):
+        np.testing.assert_array_equal(a.row_cuts, b.row_cuts)
+        np.testing.assert_array_equal(np.asarray(a.col_cuts),
+                                      np.asarray(b.col_cuts))
+
+
+def test_runtime_emits_spans_under_tracing():
+    frames = stream.drifting_hotspot(T=6, n1=24, n2=24, seed=0)
+    with obs.tracing() as tr:
+        runtime.run_stream(frames, HysteresisPolicy(), P=4, m=8, alpha=0.1)
+        names = {e["name"] for e in tr.events()}
+    assert "runtime.step" in names
+    assert "planner.dispatch" in names
+    assert "planner.collect" in names
+    assert "policy.replan_mode" in names
+
+
+def test_serve_replan_span_and_histogram():
+    rng = np.random.default_rng(0)
+    reqs = [batcher.Request(i, int(v))
+            for i, v in enumerate(rng.integers(10, 500, 40))]
+    newr = [batcher.Request(100 + i, int(v))
+            for i, v in enumerate(rng.integers(10, 500, 8))]
+    with obs.tracing() as tr:
+        asg = batcher.plan(reqs, 4)
+        asg2, mode = batcher.replan(asg, newr, policy=HysteresisPolicy(),
+                                    alpha=0.01)
+        ev = tr.events()
+    plans = [e for e in ev if e["name"] == "serve.plan"]
+    assert plans and plans[0]["args"]["queue_depth"] == 40
+    replans = [e for e in ev if e["name"] == "serve.replan"]
+    assert replans and replans[0]["args"]["mode"] == mode
+    hist, edges = batcher.load_histogram(asg2, bins=5)
+    assert hist.sum() == len(asg2) and len(edges) == 6
+    total = sum(r.prompt_tokens for r in reqs + newr)
+    assert batcher.replica_loads(asg2).sum() == total
+
+
+def test_serve_counters_tick():
+    C.reset()
+    reqs = [batcher.Request(i, 10 + i) for i in range(12)]
+    asg = batcher.plan(reqs, 3)
+    batcher.replan(asg, [batcher.Request(99, 500)])
+    assert C.serve_plans >= 1 and C.serve_replans == 1
+    assert C.serve_queue_peak >= 13
+
+
+# ---------------------------------------------------------------------------
+# benchmark helpers + demo script
+
+
+def test_common_environment_keys():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import common
+    finally:
+        sys.path.remove(ROOT)
+    env = common.environment()
+    for key in ("python", "platform", "numpy", "xla_flags", "jax"):
+        assert key in env
+    assert env is common.environment()  # cached
+
+
+def test_compare_env_mismatch_helper():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import compare
+    finally:
+        sys.path.remove(ROOT)
+    base = {"a": {"name": "a", "env": {"jax": "0.4.1", "device_count": 1}}}
+    new = {"a": {"name": "a", "env": {"jax": "0.5.0", "device_count": 1}}}
+    diffs = compare.env_mismatches(compare.env_of(base),
+                                   compare.env_of(new))
+    assert len(diffs) == 1 and "jax" in diffs[0]
+    assert compare.env_mismatches(compare.env_of(base),
+                                  compare.env_of(base)) == []
+    assert "no environment stamp" in \
+        compare.env_mismatches(None, compare.env_of(new))[0]
+
+
+def test_measure_partition_caches_by_name():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import common
+    finally:
+        sys.path.remove(ROOT)
+    saved_records = list(common.RECORDS)
+    saved_reports = dict(common.REPORTS)
+    try:
+        common.RECORDS.clear()
+        common.REPORTS.clear()
+        g = small_gamma(24)
+        rep1, rec1 = common.measure_partition("t.case", "jag-pq-opt", g, 4,
+                                              repeats=1)
+        n_after_first = len(common.RECORDS)
+        rep2, rec2 = common.measure_partition("t.case", "jag-pq-opt", g, 4,
+                                              repeats=1)
+        assert rep2 is rep1 and rec2 is rec1
+        assert len(common.RECORDS) == n_after_first  # no re-emission
+        assert rec1["bottleneck"] == rep1.bottleneck
+        assert rec1["spans"] and rec1["counters"]
+    finally:
+        common.RECORDS[:] = saved_records
+        common.REPORTS.clear()
+        common.REPORTS.update(saved_reports)
+
+
+def test_trace_demo_writes_valid_chrome_trace(tmp_path):
+    out = tmp_path / "trace.json"
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "examples/trace_demo.py", "--out", str(out),
+         "--steps", "6", "--size", "24", "--m", "8"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    ev = obs.validate_chrome_trace(doc)
+    names = {e["name"] for e in ev}
+    assert "runtime.step" in names          # live host spans
+    assert any(n.startswith("step[") for n in names)  # ledger timeline
+    assert any(e["ph"] == "M" for e in ev)  # process metadata
