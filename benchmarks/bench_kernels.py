@@ -46,4 +46,21 @@ def run(quick: bool = True) -> dict:
         np.testing.assert_allclose(np.asarray(got),
                                    np.asarray(refl(gf, rc, cc)), rtol=1e-5)
         out[("rectload", n)] = dt
+
+        # batched rectload: a leading frame axis in one launch (the path
+        # rebalance.execute prices plans through)
+        B = 4
+        gb = jnp.broadcast_to(gf, (B,) + gf.shape)
+        rcb = jnp.broadcast_to(rc, (B,) + rc.shape)
+        ccb = jnp.broadcast_to(cc, (B,) + cc.shape)
+        refl(gb, rcb, ccb).block_until_ready()
+        _, dt = timeit(lambda: refl(gb, rcb, ccb).block_until_ready(),
+                       repeats=3)
+        emit(f"kern.rectload.batched.B{B}.{n}", dt, f"rects={B * P * Q}")
+        gotb = jagged_loads(gb, rcb, ccb)
+        np.testing.assert_allclose(np.asarray(gotb),
+                                   np.asarray(refl(gb, rcb, ccb)),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(gotb)[0], np.asarray(got))
+        out[("rectload_batched", n)] = dt
     return out

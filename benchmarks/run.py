@@ -28,6 +28,7 @@ BENCHES = [
     ("moe_placement", "bench_moe_placement"),
     ("cp_balance", "bench_cp_balance"),
     ("kernels", "bench_kernels"),
+    ("serve", "bench_serve"),
     ("device_partitioner", "bench_device_partitioner"),
     ("roofline", "bench_roofline"),
 ]

@@ -6,14 +6,32 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.probe.ops import pallas_interpret_default
+
 from .rectload import jagged_loads_pallas
 from .ref import jagged_loads_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def jagged_loads(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
                  col_cuts: jnp.ndarray, *, use_pallas: bool = True,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Rectangle loads; accepts 2D Gamma or a leading-frame-axis batch.
+
+    ``interpret=None`` resolves via :func:`pallas_interpret_default`
+    (``JAX_PALLAS_INTERPRET`` override, else interpret off-TPU), matching
+    the probe kernel's convention; resolution happens outside the jit so
+    the cache key carries the concrete mode.
+    """
+    if interpret is None:
+        interpret = pallas_interpret_default()
+    return _jagged_loads(gamma, row_cuts, col_cuts, use_pallas=use_pallas,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _jagged_loads(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
+                  col_cuts: jnp.ndarray, *, use_pallas: bool = True,
+                  interpret: bool = True) -> jnp.ndarray:
     if not use_pallas:
         return jagged_loads_ref(gamma, row_cuts, col_cuts).astype(jnp.float32)
     return jagged_loads_pallas(gamma, row_cuts, col_cuts,

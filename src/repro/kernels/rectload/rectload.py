@@ -13,9 +13,14 @@ dislike arbitrary gathers, so we restructure it TPU-natively:
   The +-1 one-hot-difference matrix is built in VREGs per (stripe, column
   block) and immediately contracted — the O(P*Q*n2) mask XLA would
   materialize never exists.
+- **Leading frame axis**: a ``(B, n1+1, n2+1)`` Gamma stack with per-frame
+  cut tables is one kernel launch with grid ``(B, P, n_col_blocks)`` —
+  mirroring ``kernels.sat`` — so the rebalancing executor can price every
+  frame's adopted plan in a single dispatch.  A 2D input is the ``B=1``
+  case (squeezed on the way out).
 
-Grid: (P, n_col_blocks); the column-block axis is innermost and accumulates
-into the (1, Q) output block for the stripe.
+Grid: (B, P, n_col_blocks); the column-block axis is innermost and
+accumulates into the (1, 1, Q) output block for the (frame, stripe).
 """
 from __future__ import annotations
 
@@ -29,53 +34,66 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(row_cuts_ref, g_lo_ref, g_hi_ref, col_cuts_ref, o_ref, *,
             bn: int, n_cols: int):
-    c = pl.program_id(1)
+    c = pl.program_id(2)
 
     @pl.when(c == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    chunk = (g_hi_ref[0, :] - g_lo_ref[0, :]).astype(jnp.float32)  # (bn,)
+    chunk = (g_hi_ref[0, 0, :] - g_lo_ref[0, 0, :]).astype(jnp.float32)
     jglob = c * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
     # guard the zero-pad tail: indices past n_cols never match a cut
     jglob = jnp.where(jglob < n_cols, jglob, -2)
-    cc = col_cuts_ref[0, :]  # (Qp1,)
+    cc = col_cuts_ref[0, 0, :]  # (Qp1,)
     hi = (jglob == cc[1:, None]).astype(jnp.float32)   # (Q, bn)
     lo = (jglob == cc[:-1, None]).astype(jnp.float32)  # (Q, bn)
     d = hi - lo
-    o_ref[0, :] += jnp.dot(d, chunk, preferred_element_type=jnp.float32)
+    o_ref[0, 0, :] += jnp.dot(d, chunk, preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def jagged_loads_pallas(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
                         col_cuts: jnp.ndarray, *, bn: int = 512,
                         interpret: bool = False) -> jnp.ndarray:
-    """(P, Q) rectangle loads of a jagged partition; see module docstring."""
-    n1p, n2p = gamma.shape
-    P = row_cuts.shape[0] - 1
-    Qp1 = col_cuts.shape[1]
+    """Rectangle loads of a jagged partition; see module docstring.
+
+    ``gamma`` is ``(n1+1, n2+1)`` with ``row_cuts (P+1,)`` /
+    ``col_cuts (P, Q+1)`` -> ``(P, Q)``, or a batched
+    ``(B, n1+1, n2+1)`` stack with ``(B, P+1)`` / ``(B, P, Q+1)`` cuts
+    -> ``(B, P, Q)``; the frame axis is the outermost grid axis of a
+    single launch, never a Python loop.
+    """
+    squeeze = gamma.ndim == 2
+    g = gamma[None] if squeeze else gamma
+    rc = row_cuts[None] if squeeze else row_cuts
+    cc = col_cuts[None] if squeeze else col_cuts
+    B, n1p, n2p = g.shape
+    P = rc.shape[1] - 1
+    Qp1 = cc.shape[2]
     pad = (-n2p) % bn
-    g = jnp.pad(gamma.astype(jnp.float32), ((0, 0), (0, pad)))
-    ncb = g.shape[1] // bn
+    g = jnp.pad(g.astype(jnp.float32), ((0, 0), (0, 0), (0, pad)))
+    ncb = g.shape[2] // bn
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(P, ncb),
+        grid=(B, P, ncb),
         in_specs=[
-            # Gamma row below the stripe: row index row_cuts[s]
-            pl.BlockSpec((1, bn), lambda s, c, rc: (rc[s], c)),
-            # Gamma row at the top of the next stripe: row_cuts[s + 1]
-            pl.BlockSpec((1, bn), lambda s, c, rc: (rc[s + 1], c)),
-            # this stripe's column cuts
-            pl.BlockSpec((1, Qp1), lambda s, c, rc: (s, 0)),
+            # Gamma row below the stripe: row index row_cuts[b, s]
+            pl.BlockSpec((1, 1, bn), lambda b, s, c, rc: (b, rc[b, s], c)),
+            # Gamma row at the top of the next stripe: row_cuts[b, s + 1]
+            pl.BlockSpec((1, 1, bn),
+                         lambda b, s, c, rc: (b, rc[b, s + 1], c)),
+            # this (frame, stripe)'s column cuts
+            pl.BlockSpec((1, 1, Qp1), lambda b, s, c, rc: (b, s, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Qp1 - 1), lambda s, c, rc: (s, 0)),
+        out_specs=pl.BlockSpec((1, 1, Qp1 - 1),
+                               lambda b, s, c, rc: (b, s, 0)),
     )
     kernel = pl.pallas_call(
         functools.partial(_kernel, bn=bn, n_cols=n2p),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((P, Qp1 - 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, P, Qp1 - 1), jnp.float32),
         interpret=interpret,
     )
-    return kernel(row_cuts.astype(jnp.int32), g, g,
-                  col_cuts.astype(jnp.int32))
+    out = kernel(rc.astype(jnp.int32), g, g, cc.astype(jnp.int32))
+    return out[0] if squeeze else out

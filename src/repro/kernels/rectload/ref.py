@@ -1,4 +1,5 @@
 """Pure-jnp oracle for the rectload kernel."""
+import jax
 import jax.numpy as jnp
 
 
@@ -10,7 +11,12 @@ def jagged_loads_ref(gamma: jnp.ndarray, row_cuts: jnp.ndarray,
     row_cuts: (P+1,) int32 stripe boundaries.
     col_cuts: (P, Q+1) int32 per-stripe column cuts.
     Returns (P, Q) loads: L[s, q] = sum of A[rc[s]:rc[s+1], cc[s,q]:cc[s,q+1]].
+
+    A leading frame axis — (B, n1+1, n2+1) gamma with (B, P+1) /
+    (B, P, Q+1) cuts — vmaps to (B, P, Q), matching the batched kernel.
     """
+    if gamma.ndim == 3:
+        return jax.vmap(jagged_loads_ref)(gamma, row_cuts, col_cuts)
     hi = jnp.take(gamma, row_cuts[1:], axis=0)   # (P, n2+1)
     lo = jnp.take(gamma, row_cuts[:-1], axis=0)  # (P, n2+1)
     stripe_prefix = hi - lo                      # (P, n2+1)

@@ -9,7 +9,10 @@ circular dependency on the engine):
 - :mod:`repro.obs.counters` — the engine counter singleton (:data:`C`)
   the hot paths bump unconditionally;
 - :mod:`repro.obs.report` — :class:`PartitionReport`, the structured
-  explain-plan object ``registry.explain`` returns.
+  explain-plan object ``registry.explain`` returns;
+- :mod:`repro.obs.hist` — :class:`LogHistogram`, the bounded-memory
+  latency-percentile counter the serve simulator streams into (numpy,
+  still jax-free).
 
 Typical use::
 
@@ -25,13 +28,14 @@ Typical use::
 """
 from __future__ import annotations
 
-from . import counters, report, trace
+from . import counters, hist, report, trace
 from .counters import C, Counters
+from .hist import LogHistogram
 from .report import PartitionReport
 from .trace import (TRACER, Tracer, chrome_trace, enabled, instant, span,
                     tracing, validate_chrome_trace, write_chrome_trace)
 
-__all__ = ["C", "Counters", "PartitionReport", "TRACER", "Tracer",
-           "chrome_trace", "counters", "enabled", "instant", "report",
-           "span", "trace", "tracing", "validate_chrome_trace",
-           "write_chrome_trace"]
+__all__ = ["C", "Counters", "LogHistogram", "PartitionReport", "TRACER",
+           "Tracer", "chrome_trace", "counters", "enabled", "hist",
+           "instant", "report", "span", "trace", "tracing",
+           "validate_chrome_trace", "write_chrome_trace"]

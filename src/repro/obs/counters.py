@@ -36,10 +36,13 @@ _FIELDS = (
     "subgrid_hits",
     "subgrid_misses",
     "subgrid_memo_peak",  # high-water mark of the shared memo's size
-    # serving (serve.batcher)
+    # serving (serve.batcher / serve.queue / serve.simulate)
     "serve_plans",
     "serve_replans",
     "serve_queue_peak",   # deepest request queue seen by plan()/replan()
+    "serve_ticks",        # simulator scheduler ticks executed
+    "serve_admitted",     # requests admitted into the live queue
+    "serve_completed",    # requests served to completion
 )
 
 

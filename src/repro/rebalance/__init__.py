@@ -10,6 +10,8 @@ Turns the one-shot partitioners into a streaming runtime:
 - :mod:`.stream` — time-evolving workload generators (drifting hotspots,
   particle advection, AMR bursts, the paper's PIC series).
 - :mod:`.migrate` — plan diffing: migration volume / flow / churn.
+- :mod:`.execute` — executed migrations: move owner-changed state
+  between devices and measure it (receipts audit the ``migrate`` ledger).
 - :mod:`.policy` — never / always / every-K / hysteresis replan triggers
   (numpy-only; also reused by ``dist.cp_balance`` re-splits).
 - :mod:`.runtime` — the stepped cost loop and policy comparison harness.
@@ -20,8 +22,8 @@ from __future__ import annotations
 
 import importlib
 
-_SUBMODULES = ("batch_device", "migrate", "planner", "policy", "runtime",
-               "stream")
+_SUBMODULES = ("batch_device", "execute", "migrate", "planner", "policy",
+               "runtime", "stream")
 
 __all__ = list(_SUBMODULES)
 

@@ -48,6 +48,10 @@ class StepRecord:
     mode: str = "keep"       # replan grade: "init" | "keep" | "fast" | "slow"
     wall_time: float = 0.0   # measured host seconds spent on this step
     churn: dict | None = None  # per_processor_churn of the adopted replan
+    executed_bytes: float | None = None  # measured weight moved when the
+    # migration was actually executed (run_stream(execute=True)); None
+    # when only priced.  Equals migration_volume exactly on integer
+    # streams — see repro.rebalance.execute.
 
 
 @dataclasses.dataclass
@@ -151,7 +155,8 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                weight: str = "load", plans=None,
                gammas: list[np.ndarray] | None = None, k: int = 8,
                rounds: int = 8, mesh=None, devices: int | None = None,
-               faults=None, validate: bool = False) -> RunResult:
+               faults=None, validate: bool = False, execute: bool = False,
+               execute_devices=None) -> RunResult:
     """Drive one policy over a (T, n1, n2) stream.
 
     weight: "load" charges migration by the moved cells' current load
@@ -185,6 +190,13 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
 
     ``validate=True`` runs :meth:`batch_device.Plan.validate` on every
     adopted plan (coverage/monotonicity/load-conservation).
+
+    ``execute=True`` *performs* every adopted replan's migration through
+    :func:`repro.rebalance.execute.execute_migration` — owner-changed
+    cells' weights are moved between devices (``execute_devices``,
+    default all) and the measured total lands in
+    ``StepRecord.executed_bytes``, auditing the priced
+    ``migration_volume`` against real transfers.
     """
     if weight not in ("load", "cells"):
         raise ValueError(f"weight must be 'load' or 'cells', got {weight!r}")
@@ -276,6 +288,14 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                         evac = float(flow[dead, :].sum())
                 churn = migrate.per_processor_churn(flow=flow)
                 cost = replan_overhead + alpha * (vol + evac)
+                executed = None
+                if execute:
+                    from . import execute as execute_mod
+                    receipt = execute_mod.execute_migration(
+                        active, candidate,
+                        weights=frames[t] if weight == "load" else None,
+                        devices=execute_devices)
+                    executed = receipt.executed_bytes
                 active = candidate
                 if validate:
                     active.validate(g, m=m)
@@ -286,7 +306,7 @@ def run_stream(frames: np.ndarray, policy, *, P: int, m: int,
                 records.append(StepRecord(
                     t, achieved, ideal, True, vol, cost, evac, forced,
                     mode=mode, wall_time=time.perf_counter() - t_wall,
-                    churn=churn))
+                    churn=churn, executed_bytes=executed))
             else:
                 records.append(StepRecord(
                     t, cur_ml, ideal, False, 0.0, 0.0, mode="keep",

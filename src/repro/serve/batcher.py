@@ -13,6 +13,7 @@ has a fixed order; a scheduler may reorder).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -90,24 +91,54 @@ def plan(requests: list[Request], n_replicas: int, *,
 
 
 def _greedy_extend(assignments: list[Assignment],
-                   new_requests: list[Request]) -> list[Assignment]:
+                   new_requests: list[Request],
+                   speeds=None) -> list[Assignment]:
     """Keep-path plan: queued requests stay put (zero migration); arrivals
-    go LPT-greedy onto the least-loaded replica."""
+    go LPT-greedy onto the least (relatively) loaded replica.
+
+    A heap keyed on load replaces the linear min-scan per arrival
+    (O(K log R) instead of O(K * R)); ``(load, index)`` entries pop the
+    lowest index among equal loads, which is exactly the index the scan's
+    ``min(..., key=loads.__getitem__)`` picked, so assignments are
+    identical — ties included (property-tested on tie-free inputs).
+
+    ``speeds`` ranks replicas by *relative* load ``load / speed`` and
+    excludes dead (``speed=0``) replicas from receiving arrivals.
+    """
+    sp = search.normalize_speeds(speeds, len(assignments))
     out = [Assignment(a.replica, list(a.requests)) for a in assignments]
-    loads = [a.load for a in out]
+    heap = [(a.load / (1.0 if sp is None else sp[i]), i)
+            for i, a in enumerate(out) if sp is None or sp[i] > 0]
+    heapq.heapify(heap)
     for r in sorted(new_requests, key=lambda r: r.prompt_tokens,
                     reverse=True):
-        i = min(range(len(out)), key=loads.__getitem__)
+        load, i = heapq.heappop(heap)
         out[i].requests.append(r)
-        loads[i] += r.prompt_tokens
+        heapq.heappush(
+            heap,
+            (load + r.prompt_tokens / (1.0 if sp is None else sp[i]), i))
     return out
+
+
+def _max_rel_load(assignments: list[Assignment], sp) -> float:
+    """Bottleneck of an assignment list: absolute max load, or max
+    relative load ``load_i / speeds_i`` under a speed vector (a *loaded*
+    dead replica reads as ``inf`` — the invalid-plan signal)."""
+    loads = np.array([float(a.load) for a in assignments])
+    if not loads.size:
+        return 0.0
+    if sp is None:
+        return float(loads.max())
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(loads > 0, loads / sp, 0.0)
+    return float(rel.max())
 
 
 def replan(assignments: list[Assignment], new_requests: list[Request], *,
            algo: str = "optimal", sort: bool = True, policy=None,
            alpha: float = 0.0, replan_overhead: float = 0.0,
            steps_since_replan: int = 1,
-           last_migration_volume: float = 0.0):
+           last_migration_volume: float = 0.0, speeds=None):
     """Re-partition queued + newly arrived requests, warm-starting from the
     prior plan.
 
@@ -132,33 +163,45 @@ def replan(assignments: list[Assignment], new_requests: list[Request], *,
     predictor of the fresh-plan bottleneck, so it must stay the cheap
     path); ``'slow'`` escalates to the caller's ``algo``, warm-seeded by
     the fast candidate's bottleneck when it is the optimal bisection.
+
+    ``speeds`` pins the capacity-aware semantics end-to-end (tested in
+    ``tests/test_serve_dist.py``): *every* grade honors capacities — the
+    keep-path extends LPT on relative load (dead replicas receive no
+    arrivals), the fast predictor cuts capacity-proportional ranges via
+    ``_direct_cut_speeds`` rather than ignoring speeds, the slow path
+    runs the capacity-aware bisection, and the policy's ``StepState``
+    compares *relative* bottlenecks against the capacity-weighted ideal
+    ``total / speeds.sum()`` so the grading itself is speed-consistent.
     """
     if not assignments:
         raise ValueError("replan needs at least one existing assignment "
                          "(the replica count comes from the prior plan)")
+    R = len(assignments)
+    sp = search.normalize_speeds(speeds, R)
     reqs = [r for a in assignments for r in a.requests] + list(new_requests)
-    warm = max(a.load for a in assignments)
+    warm = _max_rel_load(assignments, sp)
     _C.serve_replans += 1
     if len(reqs) > _C.serve_queue_peak:
         _C.serve_queue_peak = len(reqs)
     with _trace.span("serve.replan", queue_depth=len(reqs),
                      arrivals=len(new_requests),
-                     replicas=len(assignments)) as sp_:
+                     replicas=R) as sp_:
         if policy is None:
             mode = "slow" if algo == "optimal" else "fast"
             sp_.args["mode"] = mode
-            return plan(reqs, len(assignments), algo=algo, sort=sort,
-                        warm=float(warm) if warm > 0 else None), mode
+            warm = warm if warm > 0 and np.isfinite(warm) else None
+            return plan(reqs, R, algo=algo, sort=sort,
+                        warm=warm, speeds=speeds), mode
 
         from repro.rebalance.policy import StepState, replan_mode
-        R = len(assignments)
         total = float(sum(r.prompt_tokens for r in reqs))
-        ext = _greedy_extend(assignments, new_requests)
-        ext_load = float(max(a.load for a in ext))
-        fast = plan(reqs, R, algo="direct", sort=sort)
-        fast_load = float(max(a.load for a in fast))
+        ext = _greedy_extend(assignments, new_requests, speeds=speeds)
+        ext_load = _max_rel_load(ext, sp)
+        fast = plan(reqs, R, algo="direct", sort=sort, speeds=speeds)
+        fast_load = _max_rel_load(fast, sp)
+        ideal = total / (R if sp is None else float(sp.sum()))
         state = StepState(step=steps_since_replan, max_load=ext_load,
-                          ideal=total / R, total_load=total,
+                          ideal=ideal, total_load=total,
                           achieved_at_replan=fast_load, total_at_replan=total,
                           steps_since_replan=steps_since_replan,
                           last_migration_volume=last_migration_volume,
@@ -168,14 +211,21 @@ def replan(assignments: list[Assignment], new_requests: list[Request], *,
         if mode == "keep":
             return ext, mode
         if mode == "slow":
-            warm = fast_load if algo == "optimal" and fast_load > 0 else None
-            return plan(reqs, R, algo=algo, sort=sort, warm=warm), mode
+            warm = fast_load if algo == "optimal" and fast_load > 0 \
+                and np.isfinite(fast_load) else None
+            return plan(reqs, R, algo=algo, sort=sort, warm=warm,
+                        speeds=speeds), mode
         return fast, mode
 
 
 def imbalance(assignments: list[Assignment]) -> float:
+    """Relative load imbalance ``max/avg - 1`` (0.0 when it is undefined:
+    no replicas, or an all-empty queue — the explicit guard keeps the
+    empty list from ever reaching ``max()``)."""
     loads = [a.load for a in assignments]
-    avg = sum(loads) / max(len(loads), 1)
+    if not loads:
+        return 0.0
+    avg = sum(loads) / len(loads)
     return max(loads) / avg - 1.0 if avg > 0 else 0.0
 
 
