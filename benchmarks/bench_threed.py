@@ -1,0 +1,132 @@
+"""d-dimensional partitioning: the SGORP device planner vs the host 3D path.
+
+Four record families cover the PR's claims (ISSUE 10):
+
+- ``sgorp.plan3d.batch`` — T 3D frames through the batched device SGORP
+  chain (``planner.plan_stream_3d``: one jit, ingest -> Gamma3 -> vmapped
+  warm start + subgradient refine) at the headline scale 64^3, T=16,
+  m=64.  Derived: frames/sec and the count of frames where the refined
+  Lmax stayed <= the warm-start heuristic's (must be T/T — the refiner
+  tracks best-seen cuts, so the warm start is a structural floor).
+- ``threed.loop.host`` — the same frames through the looped host
+  ``jag_m_heur_3d`` (slab sweep + memoized 2D solves + boundary
+  refinement).  The speedup field is the PR's >=3x acceptance gate.
+- ``threed.quality.*`` / ``sgorp.quality.*`` — Lmax quality of the 3D
+  family (jag-m-heur-3d, sgorp-3d, project-then-2d over jagged / hier /
+  hybrid) on PIC- and AMR-like volumes, measured through
+  ``registry.explain`` so spans and engine counters (slab memo hits,
+  sgorp iterations) land in the records.
+- ``sgorp.plan3d.sharded`` — the headline stream sharded over the mesh's
+  time axis; cuts asserted bit-identical to the 1-device batch.  Emitted
+  only when the platform exposes >1 device (the CI multi-device leg
+  forces 8 host devices via XLA_FLAGS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prefix, sgorp, threed
+from repro.dist import ctx
+from repro.rebalance import planner, stream
+from .common import emit, measure_partition, timeit
+
+# the ISSUE's headline scale: 64^3 volume, 16-frame stream, 64 parts
+T, N, M = 16, 64, 64
+
+
+def _host_lmax(cuts, frames, gamma3s):
+    """Per-frame Lmax of stacked device cuts, re-evaluated on host f64."""
+    c1, c2, c3 = (np.asarray(c) for c in cuts)
+    out = []
+    for t in range(frames.shape[0]):
+        part = threed.partition3d_from_grid(c1[t], c2[t], c3[t],
+                                            shape=frames.shape[1:])
+        out.append(part.max_load(frames[t], gamma3=gamma3s[t]))
+    return np.array(out)
+
+
+def run(quick: bool = True) -> dict:
+    frames = stream.pic_series_3d(T, N, N, N, seed=0)
+    fj = jnp.asarray(frames)
+    grid = sgorp.default_grid(M, (N, N, N))
+    gamma3s = [prefix.prefix_sum_3d(frames[t]) for t in range(T)]
+
+    # --- headline: batched device SGORP vs looped host jag_m_heur_3d
+    def batch():
+        out = planner.plan_stream_3d(fj, m=M)
+        out[3].block_until_ready()
+        return out
+
+    batched = batch()  # compile
+    _, dt_batch = timeit(batch, repeats=3 if quick else 5)
+
+    # warm-start floor: refined cuts may never lose to the per-axis 1D
+    # warm start they descend from (best-seen tracking in the refiner)
+    warm_fn = jax.jit(lambda g: sgorp.warm_start_impl(g, grid=grid))
+    warm_cuts = [warm_fn(jnp.asarray(g, jnp.float32)) for g in gamma3s]
+    warm_L = _host_lmax([np.stack([np.asarray(w[d]) for w in warm_cuts])
+                         for d in range(3)], frames, gamma3s)
+    ref_L = _host_lmax(batched[:3], frames, gamma3s)
+    ok = int((ref_L <= warm_L).sum())
+    emit(f"sgorp.plan3d.batch.T{T}.n{N}.m{M}", dt_batch,
+         f"fps={T / dt_batch:.0f};warm_ok={ok}/{T}",
+         bottleneck=float(ref_L.max()), warm_ok=ok, frames=T)
+    assert ok == T, f"SGORP regressed past its warm start on {T - ok} frames"
+
+    def looped():
+        parts = [threed.jag_m_heur_3d(frames[t], M) for t in range(T)]
+        return parts
+
+    parts, dt_loop = timeit(looped, repeats=1)
+    jag_L = np.array([parts[t].max_load(frames[t], gamma3=gamma3s[t])
+                      for t in range(T)])
+    speedup = dt_loop / dt_batch
+    emit(f"threed.loop.host.T{T}.n{N}.m{M}", dt_loop,
+         f"fps={T / dt_loop:.1f};speedup={speedup:.1f}x",
+         bottleneck=float(jag_L.max()), speedup=round(speedup, 1))
+    assert speedup >= 3.0, \
+        f"batched device SGORP only {speedup:.1f}x over the host loop"
+
+    # --- quality: the 3D family on PIC / AMR volumes through the registry
+    nq, mq = (32, 32) if quick else (64, 64)
+    vols = {"pic3d": prefix.pic_like_instance_3d(nq, nq, nq, seed=0),
+            "amr3d": prefix.amr_like_instance_3d(nq, nq, nq, seed=0)}
+    family = [("jag-m-heur-3d", "threed.jag3d", {}),
+              ("sgorp-3d", "sgorp", {}),
+              ("project-then-2d", "threed.proj", {}),
+              ("project-then-2d", "threed.proj-hier", {"algo2d": "hier-rb"}),
+              ("project-then-2d", "threed.proj-hybrid",
+               {"algo2d": "hybrid"})]
+    quality: dict[str, float] = {}
+    for sname, vol in vols.items():
+        for algo, tag, kw in family:
+            name = f"{tag}.quality.{sname}.n{nq}.m{mq}"
+            rep, _ = measure_partition(name, algo, vol, mq, **kw)
+            quality[name] = rep.bottleneck
+
+    # --- sharded: bit-identity across the mesh, like the 2D planner bench
+    D = jax.device_count()
+    if D > 1:
+        mesh = ctx.planner_mesh(D)
+
+        def sharded():
+            out = planner.plan_stream_3d(fj, m=M, mesh=mesh)
+            out[3].block_until_ready()
+            return out
+
+        sh = sharded()  # compile
+        for a, b in zip(sh, batched):  # sharded cuts stay bit-identical
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        _, dt_shard = timeit(sharded, repeats=3)
+        emit(f"sgorp.plan3d.sharded.D{D}.T{T}.n{N}.m{M}", dt_shard,
+             f"fps={T / dt_shard:.0f};identical=1", devices=D)
+    else:
+        print("# sgorp.plan3d.sharded skipped: 1 device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)", flush=True)
+        dt_shard = None
+
+    return {"fps_batch": T / dt_batch, "fps_loop": T / dt_loop,
+            "speedup": speedup, "quality": quality,
+            "fps_sharded": None if dt_shard is None else T / dt_shard}

@@ -23,6 +23,7 @@ BENCHES = [
     ("bench_partitioner", "bench_partitioner"),
     ("bench_hybrid", "bench_hybrid"),
     ("bench_rebalance", "bench_rebalance"),
+    ("bench_threed", "bench_threed"),
     ("bench_faults", "bench_faults"),
     ("obs", "bench_obs"),
     ("moe_placement", "bench_moe_placement"),

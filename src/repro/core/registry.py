@@ -15,13 +15,15 @@ from repro.obs import counters as _counters
 from repro.obs import trace as _trace
 from repro.obs.report import PartitionReport
 
-from . import hier, hybrid, jagged, rect, search
+from . import hier, hybrid, jagged, rect, search, threed
 from .types import Partition
 
 _REGISTRY: dict[str, Callable[..., Partition]] = {}
 
 # Algorithms that accept a heterogeneous per-processor ``speeds`` vector
-# (relative-load objective; dead speed=0 parts get zero-width rects).
+# (relative-load objective; dead speed=0 parts get zero-width rects —
+# except the sgorp family, whose fixed rectilinear grid cannot collapse
+# a cell: it raises on any non-positive speed).
 # Uniform/None speeds are legal everywhere — they normalize away before
 # dispatch, so every algorithm stays bit-identical to its homogeneous self.
 CAPACITY_AWARE = frozenset(
@@ -32,7 +34,14 @@ CAPACITY_AWARE = frozenset(
                   "jag-m-heur", "jag-m-heur-probe")
        for _o in ("hor", "ver")}
     | {"hybrid", "hybrid_auto", "hybrid-auto", "hybrid_fastslow",
-       "hybrid-fastslow"})
+       "hybrid-fastslow"}
+    | {"sgorp-2d", "sgorp-3d", "jag-m-heur-3d"})
+
+# Rank-3 algorithms consume the RAW (n1, n2, n3) load volume, not a
+# prefix — building (and sharing) the 3D prefix is the algorithm's own
+# concern (one prefix serves slab solves, loads and validity checks).
+# They return :class:`repro.core.threed.Partition3D`.
+RANK3 = frozenset({"jag-m-heur-3d", "sgorp-3d", "project-then-2d"})
 
 
 def register(name: str):
@@ -55,6 +64,15 @@ def names() -> list[str]:
 def partition(name: str, gamma: np.ndarray, m: int, *,
               speeds=None, **kw) -> Partition:
     fn = get(name)
+    nd = np.ndim(gamma)
+    if nd == 3 and name not in RANK3:
+        raise ValueError(
+            f"{name!r} is a 2D algorithm but the input is rank-3; "
+            f"rank-3 (raw load volume) algorithms: {sorted(RANK3)}")
+    if nd == 2 and name in RANK3:
+        raise ValueError(
+            f"{name!r} expects a raw (n1, n2, n3) load volume, got a "
+            f"rank-2 input (2D algorithms take a Gamma prefix)")
     _counters.C.reset()  # counter state is per-partition-call (see obs)
     sp = search.normalize_speeds(speeds, m) if speeds is not None else None
     with _trace.span(f"partition.{name}", m=int(m)):
@@ -96,13 +114,20 @@ def explain(name: str, gamma: np.ndarray, m: int, *, speeds=None,
         wall = time.perf_counter() - t0
         snap = _counters.C.snapshot()
         spans = tr.events()[before:]
-    bottleneck = float(part.max_load(gamma))
-    total = float(gamma[-1, -1])
+    if gamma.ndim == 3:
+        # rank-3 names take the raw load volume (see RANK3): shape is the
+        # volume itself and the bottleneck comes from the 3D prefix gather
+        bottleneck = float(part.max_load(gamma))
+        total = float(gamma.sum())
+        shape = tuple(gamma.shape)
+    else:
+        bottleneck = float(part.max_load(gamma))
+        total = float(gamma[-1, -1])
+        shape = (gamma.shape[0] - 1, gamma.shape[1] - 1)
     ideal = total / m if m else 0.0
     imbalance = bottleneck / ideal - 1.0 if ideal > 0 else 0.0
     return PartitionReport(
-        algo=name, m=int(m),
-        shape=(gamma.shape[0] - 1, gamma.shape[1] - 1),
+        algo=name, m=int(m), shape=shape,
         bottleneck=bottleneck, ideal=ideal, imbalance=imbalance,
         wall_time=wall, partition=part, spans=spans, counters=snap)
 
@@ -214,3 +239,27 @@ for _name, _fn in [("jag-pq-opt-device", _jag_pq_opt_device),
     _REGISTRY[_name] = _fn
     for _o in ("hor", "ver"):
         _REGISTRY[f"{_name}-{_o}"] = functools.partial(_fn, orient=_o)
+
+
+# ---------------------------------------------------------------------------
+# d-dimensional family (PR 10).  The 3D entries take the raw load volume
+# (RANK3 above); sgorp adapters stay lazy like the other device variants.
+
+
+@register("sgorp-2d")
+def _sgorp_2d(gamma, m, **kw) -> Partition:
+    """Device SGORP rectilinear refiner on a 2D Gamma (never worse than
+    its per-axis 1D projection warm start)."""
+    from . import sgorp
+    return sgorp.sgorp_2d(gamma, m, **kw)
+
+
+@register("sgorp-3d")
+def _sgorp_3d(A, m, **kw):
+    """Device SGORP rectilinear refiner on a raw (n1, n2, n3) volume."""
+    from . import sgorp
+    return sgorp.sgorp_3d(A, m, **kw)
+
+
+_REGISTRY["jag-m-heur-3d"] = threed.jag_m_heur_3d
+_REGISTRY["project-then-2d"] = threed.project_then_2d

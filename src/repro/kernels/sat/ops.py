@@ -15,8 +15,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .ref import gamma_from_sat, gamma_ref, sat_ref
+from .ref import (gamma3_from_sat, gamma3_ref, gamma_from_sat, gamma_ref,
+                  sat3_ref, sat_ref)
 from .sat import sat_pallas
+from .sat3d import sat3_pallas
 
 
 def sat_impl(a: jnp.ndarray, *, use_pallas: bool = True,
@@ -46,3 +48,35 @@ def gamma(a: jnp.ndarray, *, use_pallas: bool = True,
           interpret: bool = True) -> jnp.ndarray:
     """The paper's Gamma array: exclusive prefix, shape (..., n1+1, n2+1)."""
     return gamma_impl(a, use_pallas=use_pallas, interpret=interpret)
+
+
+# --- rank-3 twins.  Separate names (not an overload of ``sat``) because a
+# rank-3 array is ambiguous: (B, n1, n2) 2D stack vs (n1, n2, n3) volume.
+
+def sat3_impl(a: jnp.ndarray, *, use_pallas: bool = True,
+              interpret: bool = True) -> jnp.ndarray:
+    if not use_pallas:
+        return sat3_ref(a)
+    return sat3_pallas(a, interpret=interpret)
+
+
+def gamma3_impl(a: jnp.ndarray, *, use_pallas: bool = True,
+                interpret: bool = True) -> jnp.ndarray:
+    if not use_pallas:
+        return gamma3_ref(a)
+    return gamma3_from_sat(sat3_pallas(a, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def sat3(a: jnp.ndarray, *, use_pallas: bool = True,
+         interpret: bool = True) -> jnp.ndarray:
+    """Inclusive 3D prefix sum of a ``(n1, n2, n3)`` volume or a
+    ``(B, n1, n2, n3)`` frame stack."""
+    return sat3_impl(a, use_pallas=use_pallas, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gamma3(a: jnp.ndarray, *, use_pallas: bool = True,
+           interpret: bool = True) -> jnp.ndarray:
+    """Exclusive 3D prefix, shape (..., n1+1, n2+1, n3+1)."""
+    return gamma3_impl(a, use_pallas=use_pallas, interpret=interpret)

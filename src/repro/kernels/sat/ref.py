@@ -23,3 +23,27 @@ def gamma_from_sat(s: jnp.ndarray) -> jnp.ndarray:
 def gamma_ref(a: jnp.ndarray) -> jnp.ndarray:
     """Exclusive 2D prefix sum (the paper's Gamma), shape (..., n1+1, n2+1)."""
     return gamma_from_sat(sat_ref(a))
+
+
+def sat3_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive 3D prefix sum over the trailing three axes.
+
+    Batched inputs ``(B, n1, n2, n3)`` prefix each frame independently;
+    a rank-3 input is one frame.  Separate entry point from :func:`sat_ref`
+    because rank 3 is ambiguous between a ``(B, n1, n2)`` 2D stack and a
+    single ``(n1, n2, n3)`` volume — callers pick explicitly.
+    """
+    return jnp.cumsum(jnp.cumsum(jnp.cumsum(a, axis=-3), axis=-2), axis=-1)
+
+
+def gamma3_from_sat(s: jnp.ndarray) -> jnp.ndarray:
+    """Embed an inclusive 3D SAT as the exclusive Gamma: one zero plane
+    prepended on each trailing axis, shape (..., n1+1, n2+1, n3+1)."""
+    out = jnp.zeros(s.shape[:-3] + (s.shape[-3] + 1, s.shape[-2] + 1,
+                                    s.shape[-1] + 1), dtype=s.dtype)
+    return out.at[..., 1:, 1:, 1:].set(s)
+
+
+def gamma3_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive 3D prefix sum, shape (..., n1+1, n2+1, n3+1)."""
+    return gamma3_from_sat(sat3_ref(a))

@@ -36,6 +36,14 @@ _FIELDS = (
     "subgrid_hits",
     "subgrid_misses",
     "subgrid_memo_peak",  # high-water mark of the shared memo's size
+    # 3D slab memo (core.threed.SlabCache.solve)
+    "slab_lookups",
+    "slab_hits",
+    "slab_misses",
+    # SGORP device refiner (core.sgorp; host wrapper reads the loop's
+    # returned iteration/projection counts — jit can't bump Python ints)
+    "sgorp_iterations",   # while_loop iterations executed
+    "sgorp_projections",  # iterations whose integer projection moved
     # serving (serve.batcher / serve.queue / serve.simulate)
     "serve_plans",
     "serve_replans",

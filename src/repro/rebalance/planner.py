@@ -48,7 +48,8 @@ from repro.obs import trace as _trace
 from repro.rebalance.policy import replan_mode
 
 __all__ = ["ingest_stage", "sat_stage", "partition_stage", "plan_frames",
-           "plan_stream", "iter_plan_slices", "plan_iter", "plan_host",
+           "plan_frames_3d", "plan_stream", "plan_stream_3d",
+           "iter_plan_slices", "plan_iter", "plan_host",
            "profile_stages", "resolve_mesh", "replan_mode"]
 
 # How many slices the lazy iterator aims for when none is requested: deep
@@ -170,6 +171,27 @@ def plan_frames(frames: jnp.ndarray, *, P: int, m: int, k: int = 8,
                            use_pallas=use_pallas, interpret=interpret)
 
 
+def plan_frames_3d(frames: jnp.ndarray, *, grid: tuple[int, ...],
+                   max_iters: int = 256, patience: int = 32, k: int = 8,
+                   rounds: int = 8, gamma_dtype=None,
+                   use_pallas: bool = False, interpret: bool = True):
+    """The rank-3 chain: ingest -> 3D SAT -> vmapped SGORP plan.
+
+    The volumetric twin of :func:`plan_frames` for ``(T, n1, n2, n3)``
+    frame batches: one 3D Gamma build (``kernels.sat.gamma3``), then the
+    device SGORP planner per frame — per-axis 1D warm start refined by
+    the subgradient fixed point (``core.sgorp``), all under the caller's
+    jit boundary.  ``grid`` is the static (p1, p2, p3) processor grid.
+    Returns ``(cuts1 (T, p1+1), cuts2, cuts3, Lmax (T,), iters (T,),
+    projections (T,))``.
+    """
+    from repro.core import sgorp
+    return sgorp.sgorp_plan_3d_impl(
+        frames, grid=grid, max_iters=max_iters, patience=patience,
+        k=k, rounds=rounds, gamma_dtype=gamma_dtype,
+        use_pallas=use_pallas, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # mesh execution
 
@@ -215,6 +237,77 @@ def _sharded_plan_fn(mesh, P, m, k, rounds, gamma_dtype, use_pallas,
                              out_specs=spec, check_rep=not exact))
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_plan3d_fn(mesh, grid, max_iters, patience, k, rounds,
+                       gamma_dtype, use_pallas, interpret):
+    """jit(shard_map(3D chain)) for one (mesh, signature) — cached like
+    :func:`_sharded_plan_fn`."""
+    from jax.experimental.shard_map import shard_map
+    spec, _ = _dp_spec(mesh)
+    body = functools.partial(plan_frames_3d, grid=grid, max_iters=max_iters,
+                             patience=patience, k=k, rounds=rounds,
+                             gamma_dtype=gamma_dtype, use_pallas=use_pallas,
+                             interpret=interpret)
+    # SGORP's lax.while_loop has no shard_map replication rule; every
+    # computation is frame-local so skipping the check is sound (same
+    # reasoning as the exact 2D path above)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec, check_rep=False))
+
+
+def plan_stream_3d(frames, *, m: int, grid: tuple[int, ...] | None = None,
+                   mesh=None, max_iters: int = 256, patience: int = 32,
+                   k: int = 8, rounds: int = 8, gamma_dtype=None,
+                   use_pallas: bool = False, interpret: bool = True):
+    """SGORP planning for a whole (T, n1, n2, n3) volume stream.
+
+    The rank-3 twin of :func:`plan_stream`: ``mesh=None`` runs the whole
+    batch on one device under one jit; with a mesh, the time axis is
+    sharded over its data-parallel axes exactly like the 2D path (cuts
+    bit-identical across 1/2/8-device meshes; a ragged T is zero-padded
+    on device and trimmed — an all-zero frame converges trivially and is
+    discarded).  ``grid=None`` derives the (p1, p2, p3) processor grid
+    from ``m`` via :func:`repro.core.sgorp.default_grid`.  Returns the
+    stacked ``(cuts1, cuts2, cuts3, Lmax, iters, projections)`` pytree.
+    """
+    from repro.core import sgorp
+    frames = jnp.asarray(frames)
+    if frames.ndim != 4:
+        raise ValueError(
+            f"plan_stream_3d takes (T, n1, n2, n3) frames, got rank "
+            f"{frames.ndim}")
+    _check_finite(frames, 0, frames.shape[0], what="plan_stream_3d")
+    if grid is None:
+        grid = sgorp.default_grid(m, tuple(frames.shape[1:]))
+    grid = tuple(int(g) for g in grid)
+    if math.prod(grid) != m:
+        raise ValueError(f"grid {grid} has {math.prod(grid)} cells, "
+                         f"expected m={m}")
+    gamma_dtype = jnp.float32 if gamma_dtype is None else gamma_dtype
+    if mesh is None:
+        fn = jax.jit(functools.partial(
+            plan_frames_3d, grid=grid, max_iters=max_iters,
+            patience=patience, k=k, rounds=rounds,
+            gamma_dtype=jnp.dtype(gamma_dtype), use_pallas=use_pallas,
+            interpret=interpret))
+        return fn(frames)
+    from jax.sharding import NamedSharding
+    spec, D = _dp_spec(mesh)
+    T = frames.shape[0]
+    Tpad = -(-T // D) * D
+    if Tpad != T:
+        frames = jnp.concatenate(
+            [frames, jnp.zeros((Tpad - T,) + frames.shape[1:],
+                               frames.dtype)])
+    fr = jax.device_put(frames, NamedSharding(mesh, spec))
+    out = _sharded_plan3d_fn(mesh, grid, max_iters, patience, k, rounds,
+                             jnp.dtype(gamma_dtype), use_pallas,
+                             interpret)(fr)
+    if Tpad != T:
+        out = jax.tree_util.tree_map(lambda x: x[:T], out)
+    return out
+
+
 def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
                 rounds: int = 8, gamma_dtype=None,
                 use_pallas: bool = False, interpret: bool = True,
@@ -232,9 +325,21 @@ def plan_stream(frames, *, P: int, m: int, mesh=None, k: int = 8,
     (``Q = m // P``) instead of the heuristic — cuts bit-identical to
     the host ``jagged.jag_pq_opt(orient='hor')`` per frame, sharded over
     the mesh exactly like the heuristic path.
+
+    Rank-4 ``(T, n1, n2, n3)`` frames route to :func:`plan_stream_3d`
+    (the SGORP chain): ``P`` — a 2D stripe count — is ignored there; the
+    (p1, p2, p3) processor grid is derived from ``m``.
     """
     from repro.rebalance import batch_device
     frames = jnp.asarray(frames)
+    if frames.ndim == 4:
+        if exact:
+            raise ValueError(
+                "exact=True has no rank-3 solver; the 3D path plans with "
+                "the SGORP refiner (plan_stream_3d)")
+        return plan_stream_3d(frames, m=m, mesh=mesh, k=k, rounds=rounds,
+                              gamma_dtype=gamma_dtype,
+                              use_pallas=use_pallas, interpret=interpret)
     _check_finite(frames, 0, frames.shape[0], what="plan_stream")
     gamma_dtype = resolve_gamma_dtype(gamma_dtype, exact=exact)
     if mesh is None:

@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import prefix
 
 __all__ = ["drifting_hotspot", "particle_advection", "refinement_bursts",
-           "pic_series", "static", "STREAMS"]
+           "pic_series", "static", "STREAMS",
+           "pic_series_3d", "amr_series_3d", "STREAMS_3D"]
 
 
 def drifting_hotspot(T: int, n1: int, n2: int, *, n_hotspots: int = 2,
@@ -133,4 +134,35 @@ STREAMS = {
     "refinement-bursts": refinement_bursts,
     "pic": pic_series,
     "static": static,
+}
+
+
+# ---------------------------------------------------------------------------
+# rank-3 volumes: (T, n1, n2, n3) streams for the d-dimensional planner
+
+
+def pic_series_3d(T: int, n1: int, n2: int, n3: int, *, stride: int = 500,
+                  seed: int = 0) -> np.ndarray:
+    """3D PIC dumps: ``prefix.pic_like_instance_3d`` every ``stride``
+    iterations — the volumetric analogue of :func:`pic_series` (a drifting
+    shell plus a dense lobe, Poisson-sampled, strictly positive)."""
+    return np.stack([prefix.pic_like_instance_3d(n1, n2, n3,
+                                                 iteration=t * stride,
+                                                 seed=seed)
+                     for t in range(T)])
+
+
+def amr_series_3d(T: int, n1: int, n2: int, n3: int, *, levels: int = 3,
+                  seed: int = 0) -> np.ndarray:
+    """AMR-style 3D refinement hierarchy, re-drawn per frame: nested boxes
+    multiply their load by 4x per level, and the boxes move between frames
+    (fresh seed each step) — the spatially abrupt regime in 3D."""
+    return np.stack([prefix.amr_like_instance_3d(n1, n2, n3, levels=levels,
+                                                 seed=seed + t)
+                     for t in range(T)])
+
+
+STREAMS_3D = {
+    "pic3d": pic_series_3d,
+    "amr3d": amr_series_3d,
 }

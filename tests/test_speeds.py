@@ -60,6 +60,14 @@ def test_registry_ones_bit_identical():
         for name in registry.names():
             if (name.startswith(("rect", "jag-pq")) and sq * sq != m):
                 continue  # square-only algorithms
+            if name in registry.RANK3:
+                continue  # raw-volume algorithms (tests/test_threed.py)
+            if name.startswith("sgorp"):
+                from repro.core import sgorp
+                try:
+                    sgorp.default_grid(m, (n1, n2))
+                except ValueError:
+                    continue  # no processor grid fits this tiny shape
             base = registry.partition(name, g, m)
             ones = registry.partition(name, g, m, speeds=np.ones(m))
             half = registry.partition(name, g, m,
@@ -155,6 +163,19 @@ def test_capacity_aware_sweep_valid_and_dead_free():
         speeds[int(rng.integers(0, m))] = 0.0
         for name in AWARE:
             if name.startswith("jag-pq") and sq * sq != m:
+                continue
+            if name in registry.RANK3:
+                continue  # raw-volume dead-speed coverage: tests/test_threed.py
+            if name.startswith("sgorp"):
+                # sgorp's fixed rectilinear grid cannot hand a dead part a
+                # zero-width cell — the contract is an explicit refusal
+                from repro.core import sgorp
+                try:
+                    sgorp.default_grid(m, (n1, n2))
+                except ValueError:
+                    continue
+                with pytest.raises(ValueError, match="strictly positive"):
+                    registry.partition(name, g, m, speeds=speeds)
                 continue
             part = registry.partition(name, g, m, speeds=speeds)
             assert part.m == m, (name, case)

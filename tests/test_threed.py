@@ -43,3 +43,144 @@ def test_3d_beats_projection(rng):
     proj = threed.project_then_2d(A, m)
     assert proj.is_valid()
     assert jag3.load_imbalance(A, m) < proj.load_imbalance(A, m)
+
+
+# ---------------------------------------------------------------------------
+# vectorized loads / is_valid vs the per-box slicing loop (PR 10)
+
+
+def _loads_loop(part, A):
+    return np.array([A[b.x0:b.x1, b.r0:b.r1, b.c0:b.c1].sum()
+                     for b in part.boxes], dtype=np.float64)
+
+
+def _is_valid_loop(part):
+    n1, n2, n3 = part.shape
+    paint = np.zeros(part.shape, dtype=np.int64)
+    for b in part.boxes:
+        if not (0 <= b.x0 <= b.x1 <= n1 and 0 <= b.r0 <= b.r1 <= n2
+                and 0 <= b.c0 <= b.c1 <= n3):
+            return False
+        paint[b.x0:b.x1, b.r0:b.r1, b.c0:b.c1] += 1
+    return bool((paint == 1).all())
+
+
+def test_loads_and_validity_match_loop_on_random_shapes(rng):
+    """Property test: the 8-corner gather and the signed-corner scatter
+    are bit-identical to per-box slicing on random shapes / box counts."""
+    for _ in range(12):
+        shape = tuple(int(rng.integers(1, 14)) for _ in range(3))
+        A = rng.integers(0, 50, shape).astype(np.int64)
+        m = int(rng.integers(1, min(24, A.size) + 1))
+        part = threed.jag_m_heur_3d(A, m)
+        np.testing.assert_array_equal(part.loads(A), _loads_loop(part, A))
+        assert part.is_valid() == _is_valid_loop(part) is True
+
+
+def test_validity_rejects_overlap_gap_and_out_of_bounds():
+    shape = (4, 4, 4)
+    full = threed.Box(0, 4, 0, 4, 0, 4)
+    # coverage gap
+    assert not threed.Partition3D([threed.Box(0, 4, 0, 4, 0, 3)],
+                                  shape).is_valid()
+    # overlap (double paint)
+    assert not threed.Partition3D([full, threed.Box(0, 1, 0, 1, 0, 1)],
+                                  shape).is_valid()
+    # out of bounds
+    assert not threed.Partition3D([threed.Box(0, 5, 0, 4, 0, 4)],
+                                  shape).is_valid()
+    assert threed.Partition3D([full], shape).is_valid()
+    # zero-volume boxes fill out a valid partition
+    assert threed.Partition3D(
+        [full, threed.Box(4, 4, 0, 0, 0, 0)], shape).is_valid()
+
+
+# ---------------------------------------------------------------------------
+# the shared-prefix P=None sweep + slab memo (satellite 2/4)
+
+
+def test_sweep_shares_one_prefix_via_slab_memo():
+    from repro.obs.counters import C
+    A = _instance(20, seed=3)
+    C.reset()
+    p = threed.jag_m_heur_3d(A, 36)  # P=None auto-sweep
+    assert p.is_valid()
+    assert C.slab_lookups == C.slab_hits + C.slab_misses
+    assert C.slab_hits > 0  # sweep candidates + refinement share solves
+
+
+def test_edge_cases_n1_one_prime_m_and_zero_slabs():
+    rng = np.random.default_rng(7)
+    # n1=1: no multi-slab split exists; the single-slab fallback applies
+    A1 = rng.integers(1, 9, (1, 12, 12)).astype(np.int64)
+    p1 = threed.jag_m_heur_3d(A1, 9)
+    assert p1.is_valid() and len(p1.boxes) <= 9
+    # prime m with all-zero slabs in the volume
+    A2 = rng.integers(0, 9, (10, 8, 8)).astype(np.int64)
+    A2[3:6] = 0
+    p2 = threed.jag_m_heur_3d(A2, 7)
+    assert p2.is_valid()
+    np.testing.assert_equal(p2.loads(A2).sum(), A2.sum())
+    # m larger than the cell count cannot be satisfied
+    import pytest
+    with pytest.raises(ValueError, match="cells"):
+        threed.jag_m_heur_3d(np.ones((2, 2, 2), dtype=np.int64), 9)
+
+
+def test_jag_m_heur_3d_speeds_relative_loads():
+    from repro.core import search
+    A = _instance(12, seed=4)
+    speeds = np.array([1, 1, 2, 2, 4, 1, 1, 2], dtype=float)
+    p = threed.jag_m_heur_3d(A, 8, speeds=speeds)
+    assert p.is_valid()
+    assert len(p.boxes) == 8
+    np.testing.assert_equal(p.loads(A).sum(), A.sum())
+    # hetero bottleneck (relative load) no worse than the homogeneous
+    # partition evaluated under the same speeds
+    sp = search.normalize_speeds(speeds, 8)
+    hom = threed.jag_m_heur_3d(A, 8)
+    rel = (p.loads(A) / sp).max()
+    rel_hom = (hom.loads(A) / sp).max()
+    assert rel <= rel_hom
+
+
+def test_refinement_never_hurts():
+    for seed in range(3):
+        A = _instance(18, seed=seed)
+        base = threed.jag_m_heur_3d(A, 24, refine=False)
+        ref = threed.jag_m_heur_3d(A, 24, refine=True)
+        assert ref.is_valid()
+        assert ref.max_load(A) <= base.max_load(A)
+
+
+# ---------------------------------------------------------------------------
+# registry rank dispatch (RANK3) + project_then_2d variants
+
+
+def test_registry_rank_dispatch_errors():
+    import pytest
+    from repro.core import prefix, registry
+    A = _instance(8)
+    g2 = prefix.prefix_sum_2d(A.sum(axis=0))
+    with pytest.raises(ValueError, match="2D algorithm"):
+        registry.partition("jag-m-heur", A, 4)
+    with pytest.raises(ValueError, match="load volume"):
+        registry.partition("jag-m-heur-3d", g2, 4)
+
+
+def test_registry_explain_rank3():
+    from repro.core import registry
+    A = _instance(12)
+    report = registry.explain("jag-m-heur-3d", A, 12)
+    assert report.shape == A.shape
+    assert report.bottleneck == report.partition.max_load(A)
+    assert report.counters["slab_lookups"] > 0
+    assert any(s["name"].startswith("jag_m_heur_3d") for s in report.spans)
+
+
+def test_project_then_2d_algo2d_variants():
+    A = _instance(12)
+    for algo2d in ("jag-m-heur-probe", "hier-rb", "hybrid"):
+        p = threed.project_then_2d(A, 12, algo2d=algo2d)
+        assert p.is_valid()
+        np.testing.assert_equal(p.loads(A).sum(), A.sum())
